@@ -1,0 +1,33 @@
+"""Fig. 2: training accuracy of FL protocols x aggregation mechanisms.
+
+Validates: R&A+adaptive-norm > {R&A+substitution, AaYG, C-FL}; R&A clients
+are more consistent (smaller spread).  Harsh channel (reduced TX power)
+makes communication errors bite at CPU scale.
+"""
+from benchmarks import common
+
+
+def main() -> None:
+    rows = [
+        ("ra", "ra_normalized"),
+        ("ra", "substitution"),
+        ("aayg", "ra_normalized"),
+        ("aayg", "substitution"),
+        ("cfl", "ra_normalized"),
+        ("ideal_cfl", "ra_normalized"),
+    ]
+    for proto, mode in rows:
+        (res, _, _), us = common.timed(
+            common.standard_fl, protocol=proto, mode=mode,
+            tx_power_dbm=common.HARSH_TX_DBM, packet_len_bits=100_000,
+        )
+        acc = res.mean_acc[-1]
+        spread = res.acc_per_client[-1].std()
+        common.emit(
+            f"fig2/{proto}+{mode}", us,
+            f"final_acc={acc:.3f};client_spread={spread:.4f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

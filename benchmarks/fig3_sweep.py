@@ -1,0 +1,26 @@
+"""Figs. 3-7: converged accuracy vs edge density x packet length.
+
+(The paper runs 5 task/model pairs; structure is identical — we sweep the
+CPU-scale task and record the same protocol ordering.)
+"""
+from benchmarks import common
+
+
+def main() -> None:
+    for density in (0.35, 0.5, 0.8):
+        for pkt_bits in (25_000, 100_000, 400_000):
+            for proto, mode in (("ra", "ra_normalized"), ("ra", "substitution"),
+                                ("aayg", "ra_normalized")):
+                (res, _, _), us = common.timed(
+                    common.standard_fl, protocol=proto, mode=mode,
+                    edge_density=density, packet_len_bits=pkt_bits,
+                    tx_power_dbm=common.HARSH_TX_DBM, n_rounds=12,
+                )
+                common.emit(
+                    f"fig3/rho{density}/K{pkt_bits//1000}k/{proto}+{mode}", us,
+                    f"final_acc={res.mean_acc[-1]:.3f}",
+                )
+
+
+if __name__ == "__main__":
+    main()

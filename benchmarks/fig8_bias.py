@@ -1,0 +1,42 @@
+"""Fig. 8: distribution/mean of ||Lambda_l||^2 per aggregation scheme +
+eq. 17 bound cross-check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import aggregation, convergence, errors, routing, topology
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    p = jnp.ones(10) / 10
+    for pkt_bits in (25_000, 100_000, 400_000):
+        net = topology.make_network(
+            topology.TABLE_II_COORDS, edge_density=0.5,
+            packet_len_bits=pkt_bits, n_clients=10,
+            tx_power_dbm=common.HARSH_TX_DBM,
+        )
+        rho, _ = routing.e2e_success(net.link_eps)
+        vals = []
+        for i in range(200):
+            e = errors.sample_success(jax.random.fold_in(key, i), rho, 8)
+            vals.append(float(jnp.mean(aggregation.bias_sq_norm(p, e))))
+        bound = float(convergence.lambda_bound(p, rho))
+        # AaYG uses one-hop links only -> larger bias
+        rho_hop = net.link_eps[:10, :10]
+        vals_hop = []
+        for i in range(200):
+            e = errors.sample_success(jax.random.fold_in(key, 1000 + i),
+                                      jnp.maximum(rho_hop, jnp.eye(10)), 8)
+            vals_hop.append(float(jnp.mean(aggregation.bias_sq_norm(p, e))))
+        common.emit(
+            f"fig8/K{pkt_bits//1000}k", 0.0,
+            f"RA_mean={np.mean(vals):.5f};RA_p95={np.percentile(vals,95):.5f};"
+            f"eq17_bound={bound:.5f};AaYG_mean={np.mean(vals_hop):.5f}",
+        )
+        assert np.mean(vals) <= bound * 1.05, "eq.17 bound violated"
+
+
+if __name__ == "__main__":
+    main()

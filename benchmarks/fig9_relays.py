@@ -1,0 +1,25 @@
+"""Fig. 9: accuracy vs number of routing-only relay nodes.
+
+R&A exploits relays (better routes); AaYG cannot.  With enough relays R&A
+approaches ideal error-free C-FL.
+"""
+from benchmarks import common
+
+
+def main() -> None:
+    (ideal, _, _), _ = common.timed(common.standard_fl, protocol="ideal_cfl")
+    common.emit("fig9/ideal_cfl", 0.0, f"final_acc={ideal.mean_acc[-1]:.3f}")
+    for n_relays in (0, 7, 14, 28):
+        (res, net, _), us = common.timed(
+            common.standard_fl, protocol="ra", n_relays=n_relays,
+            packet_len_bits=400_000, edge_density=0.15, n_rounds=12,
+            tx_power_dbm=common.HARSH_TX_DBM,
+        )
+        common.emit(
+            f"fig9/relays{n_relays}", us,
+            f"final_acc={res.mean_acc[-1]:.3f};nodes={net.n_nodes}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp reference; correctness +
+throughput proxy (CPU timings are NOT TPU predictions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    # ra_aggregate at paper scale: 10 clients, CNN-sized model (38.72 Mbit
+    # = 1.21M float32) in K=1024 segments -> L=1182
+    n, l, k = 10, 1182, 1024
+    ks = jax.random.split(key, 3)
+    w = jax.random.normal(ks[0], (n, l, k))
+    p = jnp.ones((n,)) / n
+    e = (jax.random.uniform(ks[2], (n, n, l)) < 0.95).astype(jnp.float32)
+    e = jnp.maximum(e, jnp.eye(n)[:, :, None])
+
+    ref_out, us_ref = common.timed(
+        lambda: jax.block_until_ready(ref.ra_aggregate_ref(w, p, e)), repeats=3
+    )
+    common.emit("kernel/ra_aggregate_ref", us_ref, f"N={n};L={l};K={k}")
+    pal_out, us_pal = common.timed(
+        lambda: jax.block_until_ready(ops.ra_aggregate(w, p, e)), repeats=1
+    )
+    err = float(jnp.max(jnp.abs(pal_out - ref_out)))
+    common.emit("kernel/ra_aggregate_pallas_interp", us_pal,
+                f"allclose_err={err:.2e}")
+
+    # rwkv6 at reduced scale
+    b, s, h, d = 1, 256, 4, 64
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, s, h, d)) * 0.5
+    kk = jax.random.normal(ks[1], (b, s, h, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, d)) * 0.5
+    wd = -jnp.exp(jax.random.normal(ks[3], (b, s, h, d)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    want, us_r = common.timed(
+        lambda: jax.block_until_ready(ref.rwkv6_scan_ref(r, kk, v, wd, u)),
+        repeats=3,
+    )
+    common.emit("kernel/rwkv6_sequential_ref", us_r, f"B={b};S={s};H={h};D={d}")
+    got, us_p = common.timed(
+        lambda: jax.block_until_ready(ops.rwkv6_scan(r, kk, v, wd, u)),
+        repeats=1,
+    )
+    err = float(jnp.max(jnp.abs(got - want)))
+    common.emit("kernel/rwkv6_pallas_interp", us_p, f"allclose_err={err:.2e}")
+
+    # flash attention (causal GQA)
+    b, s, h, kv_, dh = 1, 256, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    kk2 = jax.random.normal(ks[1], (b, s, kv_, dh))
+    v2 = jax.random.normal(ks[2], (b, s, kv_, dh))
+    want, us_r = common.timed(
+        lambda: jax.block_until_ready(
+            ref.flash_attention_ref(q, kk2, v2, scale=dh**-0.5)), repeats=3)
+    common.emit("kernel/flash_attn_ref", us_r, f"B={b};S={s};H={h};KV={kv_};D={dh}")
+    got, us_p = common.timed(
+        lambda: jax.block_until_ready(
+            ops.flash_attention(q, kk2, v2, scale=dh**-0.5, block_q=64,
+                                block_k=64)), repeats=1)
+    err = float(jnp.max(jnp.abs(got - want)))
+    common.emit("kernel/flash_attn_pallas_interp", us_p, f"allclose_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""§Perf hillclimb #3 (paper's technique): collective schedule of the R&A
+exchange (core/dfl_step.ra_exchange) on a client mesh axis.
+
+Compares the routed-unicast analogue (all_to_all of destination-weighted
+segments) against the naive masked-psum schedule, by collective bytes in the
+lowered SPMD module.  Runs standalone (needs its own device count):
+
+  PYTHONPATH=src:. python benchmarks/perf_exchange.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def main() -> None:
+    from repro.core import dfl_step
+    from repro.launch.dryrun import collective_bytes
+
+    n = 16
+    mesh = jax.make_mesh((n,), ("clients",))
+    m_params = 4_194_304          # 4M params (16 MB f32) per client
+    seg_len = 1024
+
+    params = jnp.zeros((m_params,), jnp.float32)
+    p = jnp.ones((n,), jnp.float32) / n
+    rho = jnp.full((n, n), 0.9, jnp.float32)
+    key = jax.random.PRNGKey(0)
+
+    print("name,us_per_call,derived")
+    results = {}
+    for comm in ("all_to_all", "reduce_scatter", "psum"):
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P("clients"), P(), P(), P()),
+            out_specs=P("clients"),
+        )
+        def exchange(stacked, p, rho, k, _comm=comm):
+            mine = stacked[0]
+            out = dfl_step.ra_exchange(
+                mine, p, rho, k, axis="clients", seg_len=seg_len, comm=_comm
+            )
+            return out[None]
+
+        lowered = jax.jit(exchange).lower(
+            jax.ShapeDtypeStruct((n, m_params), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        compiled = lowered.compile()
+        coll = collective_bytes(compiled.as_text())
+        total = sum(coll.values())
+        per_chip_model_bytes = m_params * 4
+        results[comm] = total
+        print(
+            f"perf_exchange/{comm},0.0,"
+            f"collective_bytes={total:.3e};"
+            f"x_model_size={total / per_chip_model_bytes:.2f};"
+            f"breakdown={coll}"
+        )
+    ratio = results["psum"] / max(results["all_to_all"], 1)
+    rs = results["reduce_scatter"] / max(results["all_to_all"], 1)
+    print(f"perf_exchange/summary,0.0,psum_vs_a2a_ratio={ratio:.2f};"
+          f"rs_vs_a2a_ratio={rs:.2f}")
+
+
+if __name__ == "__main__":
+    main()

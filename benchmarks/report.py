@@ -1,0 +1,127 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from cached dry-run
+JSONs. Usage: PYTHONPATH=src:. python -m benchmarks.report [--out results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(x):
+    if x is None:
+        return "?"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.2f}ms"
+
+
+def load(out_dir, overlay_dir=None):
+    """Load dry-run JSONs; rows in overlay_dir (newer accounting) replace
+    same-tagged rows from out_dir."""
+    by_tag = {}
+    for d in ([out_dir] + ([overlay_dir] if overlay_dir else [])):
+        if not d:
+            continue
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            tag = os.path.basename(path)
+            with open(path) as f:
+                row = json.load(f)
+            if row.get("ok") or tag not in by_tag:
+                by_tag[tag] = row
+    return [by_tag[k] for k in sorted(by_tag)]
+
+
+def dryrun_table(rows):
+    lines = [
+        "| arch | shape | mesh | compile | per-dev args | per-dev temp | status |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("ok"):
+            bpd = r.get("bytes_per_device") or {}
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['compile_s']}s | {fmt_bytes(bpd.get('argument'))} | "
+                f"{fmt_bytes(bpd.get('temp'))} | ok |"
+            )
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | "
+                f"FAIL: {r.get('error','')[:60]} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(rows, mesh="16x16"):
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful FLOPs | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok") or r["mesh"] != mesh:
+            continue
+        colls = r.get("collectives", {})
+        top = max(colls.items(), key=lambda kv: kv[1])[0] if colls else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_term_s'])} | "
+            f"{fmt_s(r['memory_term_s'])} | {fmt_s(r['collective_term_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"top coll: {top} |"
+        )
+    return "\n".join(lines)
+
+
+def summarize(rows):
+    ok = [r for r in rows if r.get("ok")]
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    out = [f"total={len(rows)} ok={len(ok)} failed={len(rows)-len(ok)}"]
+    for k, v in sorted(by_dom.items()):
+        out.append(f"{k}-dominated: {len(v)}")
+    # worst roofline fraction (useful flops) per kind
+    for kind in ("train", "prefill", "decode"):
+        sub = [r for r in ok if r["kind"] == kind]
+        if sub:
+            worst = min(sub, key=lambda r: r["useful_flops_ratio"])
+            out.append(
+                f"worst useful-FLOPs ({kind}): {worst['arch']}/{worst['shape']}"
+                f"/{worst['mesh']} = {worst['useful_flops_ratio']:.3f}"
+            )
+    coll = [r for r in ok if r["dominant"] == "collective"]
+    if coll:
+        worst = max(coll, key=lambda r: r["collective_term_s"])
+        out.append(
+            f"most collective-bound: {worst['arch']}/{worst['shape']}/"
+            f"{worst['mesh']} ({fmt_s(worst['collective_term_s'])})"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--overlay", default="results/dryrun2")
+    args = ap.parse_args()
+    rows = load(args.out, args.overlay if os.path.isdir(args.overlay) else None)
+    print("## Dry-run\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(rows, "2x16x16"))
+    print("\n## Summary\n")
+    print(summarize(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Roofline report (deliverable g): reads cached dry-run JSONs and prints the
+per-(arch x shape x mesh) three-term table."""
+import glob
+import json
+import os
+
+from benchmarks import common
+
+
+def load(out_dir="results/dryrun"):
+    from benchmarks.report import load as _load
+
+    overlay = "results/dryrun2"
+    return _load(out_dir, overlay if os.path.isdir(overlay) else None)
+
+
+def main() -> None:
+    rows = load()
+    if not rows:
+        common.emit("roofline/missing", 0.0,
+                    "run `python -m repro.launch.dryrun --all --both-meshes` first")
+        return
+    ok = [r for r in rows if r.get("ok")]
+    bad = [r for r in rows if not r.get("ok")]
+    for r in ok:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        derived = (
+            f"compute_s={r['compute_term_s']:.4f};"
+            f"memory_s={r['memory_term_s']:.4f};"
+            f"collective_s={r['collective_term_s']:.4f};"
+            f"dominant={r['dominant']};"
+            f"useful_flops={r['useful_flops_ratio']:.3f}"
+        )
+        common.emit(name, 1e6 * max(r["compute_term_s"], r["memory_term_s"],
+                                    r["collective_term_s"]), derived)
+    for r in bad:
+        common.emit(f"roofline/FAILED/{r['arch']}/{r['shape']}/{r['mesh']}",
+                    0.0, r.get("error", "?"))
+    common.emit("roofline/summary", 0.0, f"ok={len(ok)};failed={len(bad)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  fig2   — protocol x aggregation-mechanism training accuracy (paper Fig. 2)
+  fig3   — edge-density x packet-length sweep (paper Figs. 3-7)
+  table3 — TDMA slots + traffic per round (paper Table III)
+  fig8   — ||Lambda||^2 statistics + eq. 17 bound (paper Fig. 8)
+  fig9   — routing-only relay nodes (paper Fig. 9)
+  fig10  — aggregation-coefficient distributions (paper Fig. 10)
+  kernel — Pallas kernels vs references
+  roofline — dry-run derived roofline table (DESIGN.md §Roofline)
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = ["fig2_protocols", "fig3_sweep", "table3_overhead", "fig8_bias",
+           "fig9_relays", "fig10_coeffs", "kernel_bench", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module prefixes")
+    args = ap.parse_args()
+    mods = MODULES
+    if args.only:
+        keys = args.only.split(",")
+        mods = [m for m in MODULES if any(m.startswith(k) for k in keys)]
+    print("name,us_per_call,derived")
+    failed = []
+    for m in mods:
+        try:
+            importlib.import_module(f"benchmarks.{m}").main()
+        except Exception as e:
+            failed.append(m)
+            print(f"{m},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Splice generated dry-run/roofline tables into EXPERIMENTS.md markers.
+
+  PYTHONPATH=src:. python -m benchmarks.splice_experiments
+"""
+import os
+import re
+
+from benchmarks import report
+
+
+def main() -> None:
+    rows = report.load("results/dryrun",
+                       "results/dryrun2" if os.path.isdir("results/dryrun2")
+                       else None)
+    # keep only baseline combos (no perf-variant tags) — tags contain '__'
+    # twice for baseline files: arch__shape__mesh.json
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+
+    dr = report.dryrun_table(rows)
+    rt16 = report.roofline_table(rows, "16x16")
+    rt512 = report.roofline_table(rows, "2x16x16")
+    summ = report.summarize(rows)
+
+    text = text.replace("<!-- DRYRUN_TABLE -->", dr)
+    text = text.replace(
+        "<!-- ROOFLINE_TABLE -->",
+        "### Single-pod 16x16 (256 chips)\n\n" + rt16 +
+        "\n\n### Multi-pod 2x16x16 (512 chips)\n\n" + rt512,
+    )
+    text = text.replace("<!-- SUMMARY -->", "```\n" + summ + "\n```")
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("spliced:", len(rows), "rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Table III: TDMA slots + total traffic per round, per protocol/density."""
+import numpy as np
+
+from benchmarks import common
+from repro.core import overhead, routing, topology
+
+
+def main() -> None:
+    # paper's model sizes in Mbits (Sec. V-A.1)
+    models_mbits = {"cnn": 38.72, "resnet18": 374.08, "resnet56": 18.92,
+                    "rnn": 27.73}
+    for density in (0.35, 0.5, 0.8):
+        net = topology.paper_network(edge_density=density)
+        rho, nxt = routing.e2e_success(net.link_eps)
+        nxt = np.asarray(nxt)
+        adj = np.asarray(net.adjacency)
+        for mname, mbits in models_mbits.items():
+            ra = overhead.ra_overhead(nxt, 10, mbits)
+            a1 = overhead.aayg_overhead(adj, 10, mbits, 1)
+            a5 = overhead.aayg_overhead(adj, 10, mbits, 5)
+            cf = overhead.cfl_overhead(nxt, 10, mbits, 6)
+            common.emit(
+                f"table3/rho{density}/{mname}", 0.0,
+                f"RA_slots={ra.n_slots};RA_Mbits={ra.traffic_mbits:.0f};"
+                f"AaYG1_slots={a1.n_slots};AaYG1_Mbits={a1.traffic_mbits:.0f};"
+                f"AaYG5_slots={a5.n_slots};AaYG5_Mbits={a5.traffic_mbits:.0f};"
+                f"CFL_slots={cf.n_slots};CFL_Mbits={cf.traffic_mbits:.0f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Pytree checkpointing: npz payload + JSON manifest (no orbax offline)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _paths(tree: Pytree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def save(path: str, tree: Pytree, *, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves = _paths(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, (_, l) in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "keys": [k for k, _ in leaves],
+        "treedef": str(treedef),
+        "step": step,
+        "dtypes": [str(np.asarray(l).dtype) for _, l in leaves],
+        "shapes": [list(np.asarray(l).shape) for _, l in leaves],
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Pytree) -> Pytree:
+    """Restore into the structure of `like` (shape/dtype checked)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    stored = [data[f"leaf_{i}"] for i in range(len(manifest["keys"]))]
+    if len(stored) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves, target has {len(leaves_like)}"
+        )
+    out = []
+    for got, want in zip(stored, leaves_like):
+        if tuple(got.shape) != tuple(np.shape(want)):
+            raise ValueError(f"shape mismatch: {got.shape} vs {np.shape(want)}")
+        out.append(jnp.asarray(got, dtype=want.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(path: str) -> int | None:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

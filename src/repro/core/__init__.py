@@ -1,0 +1,11 @@
+"""Core R&A D-FL library — the paper's contribution as composable JAX modules."""
+from repro.core import (  # noqa: F401
+    aggregation,
+    convergence,
+    dfl_step,
+    errors,
+    overhead,
+    protocols,
+    routing,
+    topology,
+)

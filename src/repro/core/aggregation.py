@@ -1,0 +1,98 @@
+"""Local model aggregation rules (paper Sec. III-B.3 + benchmarks).
+
+Three aggregation mechanisms over segmented client models:
+
+  * ``ra_normalized``   — the paper's adaptive aggregation-coefficient
+                          normalization (eq. 6): per segment, weights of the
+                          error-free senders are renormalized to sum to 1.
+  * ``substitution``    — baseline [12]: erroneous segments are replaced by
+                          the receiver's own corresponding segment, ideal
+                          weights p_m retained.
+  * ``ideal``           — error-free weighted average (C-FL / eq. 8 target).
+
+Inputs are client-stacked segment tensors W (N, L, K), success masks
+e (N, N, L) with e[m, n, l] = 1 iff segment l of sender m reached receiver n
+error-free, and weights p (N,).  Outputs are per-receiver aggregated segments
+(N, L, K) — receiver-major, i.e. out[n] is client n's locally aggregated
+model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def aggregation_coefficients(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """Adaptive coefficients p_{m,n,l} = p_m e_{m,n,l} / sum_m' p_m' e_{m',n,l}.
+
+    Args:
+      p: (N,) ideal weights, sum to 1.
+      e: (N, N, L) success indicators (sender, receiver, segment).
+
+    Returns:
+      coeff: (N, N, L); for every (n, l): sum_m coeff[m, n, l] == 1 provided
+      at least one segment arrived (always true: own model always counts).
+    """
+    w = p[:, None, None] * e                      # (N, N, L)
+    denom = jnp.sum(w, axis=0, keepdims=True)      # (1, N, L)
+    return w / jnp.maximum(denom, _EPS)
+
+
+def ra_normalized(w_seg: jnp.ndarray, p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (6): adaptively normalized aggregation.
+
+    out[n, l] = sum_m p_m e[m,n,l] w_seg[m, l] / sum_m p_m e[m,n,l]
+    """
+    coeff = aggregation_coefficients(p, e)         # (N, N, L)
+    # (m, n, l) x (m, l, k) -> (n, l, k)
+    return jnp.einsum("mnl,mlk->nlk", coeff, w_seg)
+
+
+def substitution(w_seg: jnp.ndarray, p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """Model-substitution baseline [12].
+
+    Receiver n uses sender m's segment if it arrived, otherwise its OWN
+    segment, keeping the ideal weights p_m:
+      out[n, l] = sum_m p_m * (e[m,n,l] w[m,l] + (1 - e[m,n,l]) w[n,l])
+    """
+    recv = jnp.einsum("mnl,mlk->nlk", p[:, None, None] * e, w_seg)
+    miss = jnp.einsum("mnl->nl", p[:, None, None] * (1.0 - e))  # (N, L)
+    return recv + miss[:, :, None] * w_seg
+
+
+def ideal(w_seg: jnp.ndarray, p: jnp.ndarray,
+          e: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Error-free global aggregate, broadcast to every receiver (eq. 8)."""
+    g = jnp.einsum("m,mlk->lk", p, w_seg)
+    return jnp.broadcast_to(g[None], w_seg.shape)
+
+
+AGGREGATORS = {
+    "ra_normalized": ra_normalized,
+    "substitution": substitution,
+    "ideal": ideal,
+}
+
+
+def bias_matrix(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """Aggregation bias matrix Lambda_l with entries p_m - p_{m,n,l} (eq. 10).
+
+    Returns (L, N, N) — one (sender x receiver) bias matrix per segment,
+    matching the paper's per-segment Lambda_l^t.
+    """
+    coeff = aggregation_coefficients(p, e)          # (m, n, l)
+    lam = p[:, None, None] - coeff                  # (m, n, l)
+    return jnp.transpose(lam, (2, 0, 1))
+
+
+def bias_sq_norm(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """||Lambda_l||_F^2 per segment, shape (L,) — Fig. 8 statistic.
+
+    The paper bounds E||Lambda_l||^2 via the entry-wise sum of squares
+    (Cauchy-Schwarz step (26a)), so the Frobenius norm is the right
+    empirical counterpart.
+    """
+    lam = bias_matrix(p, e)
+    return jnp.sum(lam * lam, axis=(1, 2))

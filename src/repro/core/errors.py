@@ -1,0 +1,100 @@
+"""Segmented model delivery under communication errors (paper Sec. III-B.2).
+
+A model of M parameters is encoded as float32 and segmented into
+L = ceil(M / K) packets of K values.  The l-th segment of client m's model
+reaches client n error-free with probability rho_{m,n} (the E2E packet
+success rate of the chosen route); the success indicator e_{m,n,l} is an
+independent Bernoulli per (m, n, l) triple (eq. 7).
+
+This module provides the pytree <-> segment codec and the error sampling.
+All functions are jit-friendly; shapes depend only on (N, L, K).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+FLOAT_BITS = 32  # the paper encodes models as float32
+
+
+def param_count(params: Pytree) -> int:
+    """Total number of parameters in one client's pytree (no leading N axis)."""
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+
+
+def num_segments(m_params: int, seg_len: int) -> int:
+    return -(-m_params // seg_len)
+
+
+def packet_len_bits(seg_len: int) -> int:
+    """Packet length in bits for K float32 values (paper: 32K)."""
+    return FLOAT_BITS * seg_len
+
+
+def stack_to_matrix(stacked: Pytree) -> tuple[jnp.ndarray, Any]:
+    """Flatten a client-stacked pytree (leaves (N, ...)) to a (N, M) matrix.
+
+    Returns (matrix, unflatten_spec) where the spec rebuilds the pytree.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    n = leaves[0].shape[0]
+    flat = [l.reshape(n, -1) for l in leaves]
+    sizes = [f.shape[1] for f in flat]
+    shapes = [l.shape[1:] for l in leaves]
+    mat = jnp.concatenate(flat, axis=1)
+    return mat, (treedef, sizes, shapes)
+
+
+def matrix_to_stack(mat: jnp.ndarray, spec: Any) -> Pytree:
+    treedef, sizes, shapes = spec
+    n = mat.shape[0]
+    splits = np.cumsum(sizes)[:-1]
+    parts = jnp.split(mat, splits, axis=1)
+    leaves = [p.reshape((n,) + tuple(s)) for p, s in zip(parts, shapes)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def segment(mat: jnp.ndarray, seg_len: int) -> jnp.ndarray:
+    """(N, M) -> (N, L, K), zero-padded in the final segment."""
+    n, m = mat.shape
+    l = num_segments(m, seg_len)
+    pad = l * seg_len - m
+    mat = jnp.pad(mat, ((0, 0), (0, pad)))
+    return mat.reshape(n, l, seg_len)
+
+
+def unsegment(seg: jnp.ndarray, m_params: int) -> jnp.ndarray:
+    """(N, L, K) -> (N, M), dropping padding."""
+    n = seg.shape[0]
+    return seg.reshape(n, -1)[:, :m_params]
+
+
+def sample_success(
+    key: jax.Array,
+    rho: jnp.ndarray,
+    n_segments: int,
+    *,
+    n_clients: int | None = None,
+) -> jnp.ndarray:
+    """Sample success indicators e_{m,n,l} ~ Bernoulli(rho_{m,n}).
+
+    Args:
+      key: PRNG key.
+      rho: (V, V) E2E packet success rates (only the client block is used).
+      n_segments: L.
+      n_clients: number of FL clients N (defaults to rho.shape[0]).
+
+    Returns:
+      e: (N, N, L) float32 in {0, 1}.  e[n, n, :] == 1 (own model is local).
+    """
+    n = n_clients or rho.shape[0]
+    r = rho[:n, :n]
+    u = jax.random.uniform(key, (n, n, n_segments))
+    e = (u < r[:, :, None]).astype(jnp.float32)
+    eye = jnp.eye(n)[:, :, None]
+    return jnp.maximum(e, eye)

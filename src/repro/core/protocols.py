@@ -1,0 +1,149 @@
+"""One-round model-exchange protocols (paper Sec. III + benchmarks Sec. V).
+
+All protocols consume a *client-stacked* parameter pytree (every leaf has a
+leading N axis), the aggregation weights p, link/E2E quality matrices, and a
+PRNG key, and return the new client-stacked pytree after local aggregation.
+
+  * ``ra_round``   — Route-and-Aggregate D-FL (the paper's proposal):
+                     models are delivered along min-E2E-PER routes; each
+                     segment survives with prob rho_{m,n}; receivers run
+                     adaptive normalization (or substitution baseline).
+  * ``aayg_round`` — Aggregate-as-You-Go gossip [12]-[14]: J one-hop
+                     broadcast+aggregate iterations; a segment of a direct
+                     neighbor survives with the one-hop packet success rate.
+  * ``cfl_round``  — Centralized FL via routes: lossy uplink to a chosen
+                     aggregator, lossy downlink broadcast back; erroneous
+                     downlink segments are replaced by the receiver's own.
+
+Everything is jit-compatible; `seg_len`, `mode`, and `J` are static.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, errors
+
+Pytree = Any
+
+
+def _to_segments(stacked: Pytree, seg_len: int):
+    mat, spec = errors.stack_to_matrix(stacked)
+    m_params = mat.shape[1]
+    return errors.segment(mat, seg_len), spec, m_params
+
+
+def _from_segments(seg: jnp.ndarray, spec, m_params: int) -> Pytree:
+    return errors.matrix_to_stack(errors.unsegment(seg, m_params), spec)
+
+
+@partial(jax.jit, static_argnames=("seg_len", "mode"))
+def ra_round(
+    stacked: Pytree,
+    p: jnp.ndarray,
+    rho: jnp.ndarray,
+    key: jax.Array,
+    *,
+    seg_len: int,
+    mode: str = "ra_normalized",
+) -> tuple[Pytree, jnp.ndarray]:
+    """R&A D-FL local aggregation round.
+
+    Returns (new_stacked, e) where e is the (N, N, L) success mask actually
+    sampled (exposed for bias/Λ diagnostics).
+    """
+    w_seg, spec, m_params = _to_segments(stacked, seg_len)
+    n = w_seg.shape[0]
+    e = errors.sample_success(key, rho, w_seg.shape[1], n_clients=n)
+    out = aggregation.AGGREGATORS[mode](w_seg, p, e)
+    return _from_segments(out, spec, m_params), e
+
+
+@partial(jax.jit, static_argnames=("seg_len", "mode", "n_mixes"))
+def aayg_round(
+    stacked: Pytree,
+    p: jnp.ndarray,
+    link_eps: jnp.ndarray,
+    key: jax.Array,
+    *,
+    seg_len: int,
+    mode: str = "ra_normalized",
+    n_mixes: int = 1,
+) -> Pytree:
+    """Aggregate-as-You-Go gossip: J = n_mixes one-hop mix iterations.
+
+    ``link_eps`` is the (V, V) one-hop packet success matrix (0 where not
+    adjacent); only the leading N-client block participates (AaYG cannot
+    exploit routing-only relay nodes — Fig. 9 note).
+    """
+    w_seg, spec, m_params = _to_segments(stacked, seg_len)
+    n, l, _ = w_seg.shape
+    eps = link_eps[:n, :n]
+
+    def mix(w, key):
+        u = jax.random.uniform(key, (n, n, l))
+        e = (u < eps[:, :, None]).astype(jnp.float32)
+        e = jnp.maximum(e, jnp.eye(n)[:, :, None])  # own model always present
+        return aggregation.AGGREGATORS[mode](w, p, e)
+
+    keys = jax.random.split(key, n_mixes)
+    w_seg = jax.lax.fori_loop(
+        0, n_mixes, lambda j, w: mix(w, keys[j]), w_seg
+    )
+    return _from_segments(w_seg, spec, m_params)
+
+
+@partial(jax.jit, static_argnames=("seg_len", "mode", "aggregator"))
+def cfl_round(
+    stacked: Pytree,
+    p: jnp.ndarray,
+    rho: jnp.ndarray,
+    key: jax.Array,
+    *,
+    seg_len: int,
+    mode: str = "ra_normalized",
+    aggregator: int = 6,
+) -> Pytree:
+    """C-FL benchmark: star aggregation at `aggregator` via min-PER routes.
+
+    Uplink: segment l of client m reaches the aggregator w.p. rho[m, a].
+    Downlink: the global segment reaches client n w.p. rho[a, n]; on failure
+    the client keeps its own local segment (paper's C-FL description).
+    """
+    w_seg, spec, m_params = _to_segments(stacked, seg_len)
+    n, l, k = w_seg.shape
+    kup, kdn = jax.random.split(key)
+
+    # Uplink success mask for each sender/segment, destination = aggregator.
+    e_up = (jax.random.uniform(kup, (n, l)) < rho[:n, aggregator, None]).astype(
+        jnp.float32
+    )
+    e_up = e_up.at[aggregator].set(1.0)
+
+    if mode == "ra_normalized":
+        wts = p[:, None] * e_up                               # (N, L)
+        denom = jnp.maximum(jnp.sum(wts, axis=0), 1e-12)      # (L,)
+        g = jnp.einsum("ml,mlk->lk", wts, w_seg) / denom[:, None]
+    else:  # substitution: aggregator substitutes its own segments
+        recv = jnp.einsum("ml,mlk->lk", p[:, None] * e_up, w_seg)
+        miss = jnp.einsum("ml->l", p[:, None] * (1.0 - e_up))
+        g = recv + miss[:, None] * w_seg[aggregator]
+
+    # Downlink: erroneous global segments replaced by the receiver's own.
+    e_dn = (jax.random.uniform(kdn, (n, l)) < rho[aggregator, :n, None]).astype(
+        jnp.float32
+    )
+    e_dn = e_dn.at[aggregator].set(1.0)
+    out = e_dn[:, :, None] * g[None] + (1.0 - e_dn)[:, :, None] * w_seg
+    return _from_segments(out, spec, m_params)
+
+
+@partial(jax.jit, static_argnames=("seg_len",))
+def ideal_cfl_round(stacked: Pytree, p: jnp.ndarray, *, seg_len: int) -> Pytree:
+    """Error-free C-FL (the paper's ideal reference in Fig. 9)."""
+    w_seg, spec, m_params = _to_segments(stacked, seg_len)
+    out = aggregation.ideal(w_seg, p)
+    return _from_segments(out, spec, m_params)

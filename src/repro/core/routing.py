@@ -1,0 +1,135 @@
+"""Min-E2E-PER routing for R&A D-FL (paper Proposition 1).
+
+The optimal route between clients (m, n) maximizes the product of per-hop
+packet success rates, i.e. the all-pairs shortest path on edge weights
+``-log eps_{m,n}``.  We implement Floyd–Warshall as a pure-JAX
+``lax.fori_loop`` over a dense cost matrix, tracking next-hop pointers so
+routes can be reconstructed for the overhead accounting (Table III).
+
+Also implements the bandwidth-constrained variant (end of Section IV):
+when links are limited, homologous route-sets are admitted in decreasing
+order of the source's aggregation weight p_m.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_INF = jnp.inf
+
+
+@jax.jit
+def floyd_warshall(cost: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """All-pairs shortest paths on a dense non-negative cost matrix.
+
+    Args:
+      cost: (V, V) edge costs; inf where no edge; diagonal ignored.
+
+    Returns:
+      dist:     (V, V) shortest path costs (0 on diagonal).
+      next_hop: (V, V) int32 next-hop matrix; next_hop[i, j] is the neighbor
+                of i on the shortest i->j path (j itself for direct edges,
+                i on the diagonal / unreachable pairs).
+    """
+    v = cost.shape[0]
+    dist = jnp.where(jnp.eye(v, dtype=bool), 0.0, cost)
+    # Direct edges: next hop is the destination.
+    nxt = jnp.where(
+        jnp.isfinite(cost) & ~jnp.eye(v, dtype=bool),
+        jnp.broadcast_to(jnp.arange(v, dtype=jnp.int32)[None, :], (v, v)),
+        jnp.broadcast_to(jnp.arange(v, dtype=jnp.int32)[:, None], (v, v)),
+    )
+
+    def body(k, carry):
+        dist, nxt = carry
+        through_k = dist[:, k, None] + dist[None, k, :]
+        better = through_k < dist
+        dist = jnp.where(better, through_k, dist)
+        nxt = jnp.where(better, nxt[:, k, None], nxt)
+        return dist, nxt
+
+    dist, nxt = jax.lax.fori_loop(0, v, body, (dist, nxt))
+    return dist, nxt
+
+
+def link_cost(link_eps: jnp.ndarray) -> jnp.ndarray:
+    """Edge weight -log(eps) (inf for missing / zero-quality links)."""
+    return jnp.where(link_eps > 0.0, -jnp.log(jnp.clip(link_eps, 1e-300, 1.0)), _INF)
+
+
+@jax.jit
+def e2e_success(link_eps: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """E2E packet success rate matrix rho_{m,n} under min-PER routing (eq. 5).
+
+    Returns (rho, next_hop).  rho has 1.0 on the diagonal (a client always
+    "receives" its own model), 0.0 for unreachable pairs.
+    """
+    dist, nxt = floyd_warshall(link_cost(link_eps))
+    rho = jnp.where(jnp.isfinite(dist), jnp.exp(-dist), 0.0)
+    return rho, nxt
+
+
+def reconstruct_route(next_hop: np.ndarray, src: int, dst: int,
+                      max_hops: int | None = None) -> list[int]:
+    """Node sequence src -> ... -> dst from a next-hop matrix (host-side)."""
+    next_hop = np.asarray(next_hop)
+    if src == dst:
+        return [src]
+    max_hops = max_hops or next_hop.shape[0] + 1
+    route = [src]
+    cur = src
+    for _ in range(max_hops):
+        cur = int(next_hop[cur, dst])
+        route.append(cur)
+        if cur == dst:
+            return route
+        if cur == src:  # unreachable sentinel
+            return []
+    return []
+
+
+def all_routes(next_hop: np.ndarray, n_clients: int) -> dict[tuple[int, int], list[int]]:
+    """All client-pair routes (host-side helper for overhead accounting)."""
+    routes = {}
+    for m in range(n_clients):
+        for n in range(n_clients):
+            if m != n:
+                routes[(m, n)] = reconstruct_route(next_hop, m, n)
+    return routes
+
+
+def route_edges(route: list[int]) -> list[tuple[int, int]]:
+    """Undirected edge list (u<v canonical) of a node-sequence route."""
+    return [tuple(sorted((route[i], route[i + 1]))) for i in range(len(route) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth-constrained joint routing (Section IV, final paragraphs).
+# ---------------------------------------------------------------------------
+def admit_homologous_routes(
+    p: np.ndarray,
+    rho: np.ndarray,
+    *,
+    n_clients: int,
+    max_admitted: int | None = None,
+) -> list[int]:
+    """Priority admission of homologous route-sets under limited bandwidth.
+
+    The paper: when bandwidth is insufficient, admit per-source route sets
+    (source m -> all destinations) in an order that most reduces
+    ``sum_m (p_m^2 + p_m) * sum_n (1 - rho_{m,n})``, i.e. sources with larger
+    p_m (weighted by their total route deficiency) go first.
+
+    Returns the admission order (list of source client indices).
+    """
+    p = np.asarray(p)
+    rho = np.asarray(rho)[:n_clients, :n_clients]
+    deficiency = (1.0 - rho).sum(axis=1)
+    score = (p ** 2 + p) * deficiency
+    order = list(np.argsort(-score))
+    if max_admitted is not None:
+        order = order[:max_admitted]
+    return [int(i) for i in order]

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: flash-attention forward (causal, GQA).
+
+§Perf iteration 1 showed the HLO "bytes accessed" roofline term cannot
+credit XLA fusion: the f32 block logits of the jnp flash path still count as
+HBM traffic. This kernel is the TPU-native resolution — the (BQ, BK) logits
+tile lives ONLY in VMEM; HBM traffic is exactly q/k/v in + out once.
+
+Grid: (B*KV*G heads, S/BQ query blocks, S/BK key blocks) — key blocks
+innermost and sequential, carrying the online-softmax state (m, l, acc) in
+VMEM scratch. Causal masking skips fully-masked tiles via @pl.when.
+
+Tiling: BQ=BK=128 aligns the MXU contraction dims; the working set
+(q/k/v tiles + logits tile + acc) is ~(3·128·Dh + 128² + 128·Dh)·4B
+≈ 460 KB at Dh=128 — comfortably inside the ~16 MB VMEM budget.
+
+The backward pass uses the recompute-based custom VJP in
+`repro.models.flash` (same algebra, jnp); a dedicated bwd kernel is the
+documented next step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                      *, scale, causal, bq, bk, nkb):
+    """One grid step: (head bh, q block i, k block j) — j sequential."""
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: skip tiles strictly above the diagonal.
+    run = (not causal) or (j * bk <= i * bq + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, Dh)
+        k = k_ref[0].astype(jnp.float32)            # (BK, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = (q @ k.T) * scale                        # (BQ, BK) — VMEM only
+        if causal:
+            q_idx = i * bq + jax.lax.iota(jnp.int32, bq)
+            k_idx = j * bk + jax.lax.iota(jnp.int32, bk)
+            mask = q_idx[:, None] >= k_idx[None, :]
+            s = jnp.where(mask, s, -1e30)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == nkb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention_fwd(q, k, v, *, scale: float, causal: bool = True,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True):
+    """q: (B,S,H,Dh); k/v: (B,S,KV,Dh) -> (B,S,H,Dh). GQA-aware."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    bq = min(block_q, s)
+    if s % bq:
+        bq = next(x for x in range(bq, 0, -1) if s % x == 0)
+    bk = min(block_k, s)
+    if s % bk:
+        bk = next(x for x in range(bk, 0, -1) if s % x == 0)
+    nqb, nkb = s // bq, s // bk
+
+    # Head-major layouts: q (B*H, S, Dh); k/v (B*KV, S, Dh).
+    qm = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * h, s, dh)
+    km = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * kv, s, dh)
+    vm = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * kv, s, dh)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal, bq=bq, bk=bk, nkb=nkb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nqb, nkb),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, i, j: (bh, i, 0)),
+            # GQA: query head bh maps to kv head bh // g.
+            pl.BlockSpec((1, bk, dh), lambda bh, i, j, g=g: (bh // g, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, i, j, g=g: (bh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running denom l
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qm, km, vm)
+
+    return out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

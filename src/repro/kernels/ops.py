@@ -1,0 +1,48 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes in Python, validating semantics); on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile natively.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import ra_aggregate as _ra
+from repro.kernels import rwkv6_scan as _rwkv
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def ra_aggregate(w_seg, p, e, *, block_l: int = 8, interpret: bool | None = None):
+    """Fused adaptive-normalized aggregation (paper eq. 6).
+
+    w_seg: (N, L, K); p: (N,); e: (N, N, L) -> (N, L, K).
+    """
+    it = INTERPRET if interpret is None else interpret
+    return _ra.ra_aggregate(w_seg, p, e, block_l=block_l, interpret=it)
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
+    """Chunked rwkv6 linear-attention scan.
+
+    r/k/v/w: (B, S, H, D); u: (H, D) -> (B, S, H, D).
+    """
+    it = INTERPRET if interpret is None else interpret
+    return _rwkv.rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=it)
+
+
+def flash_attention(q, k, v, *, scale, causal=True, block_q=128, block_k=128,
+                    interpret: bool | None = None):
+    """Pallas flash-attention forward (causal GQA).
+
+    q: (B,S,H,D); k/v: (B,S,KV,D) -> (B,S,H,D).
+    """
+    from repro.kernels import flash_attention as _fa
+
+    it = INTERPRET if interpret is None else interpret
+    return _fa.flash_attention_fwd(q, k, v, scale=scale, causal=causal,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=it)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: R&A adaptive-normalized segment aggregation (eq. 6).
+
+The paper's aggregation hot spot: for every receiver n and segment l,
+    out[n, l] = sum_m p_m e[m,n,l] w[m,l] / sum_m p_m e[m,n,l].
+
+Naive jnp materializes the (N, N, L) coefficient tensor and an einsum over
+N x L x K in HBM.  On TPU the op is memory-bound (one pass over N copies of
+the model), so the kernel streams (L, K)-tiles of every sender's segments
+through VMEM and fuses mask-weighting, reduction, and renormalization in a
+single pass — the receiver axis is the grid's outer dimension, the segment
+axis is tiled.
+
+Tiling: block (BL segments x K values) per sender; K is the packet payload
+(aligned to 128 lanes by the wrapper); BL chosen so N * BL * K * 4B fits
+comfortably in VMEM (~16 MB).
+
+The mask e is passed as float32 (0/1) — (N, N, L) is tiny relative to the
+segments (K >= 128), so it rides along each grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ra_kernel(p_ref, e_ref, w_ref, out_ref):
+    """One grid step: receiver block x segment block.
+
+    Block views:
+      p_ref:   (N, 1)        aggregation weights (replicated per step)
+      e_ref:   (1, N, BL)    success mask column for THIS receiver
+      w_ref:   (N, BL, K)    sender segments for this segment block
+      out_ref: (1, BL, K)    aggregated output for (receiver, segment block)
+    """
+    p = p_ref[:, 0]                                   # (N,)
+    e = e_ref[0]                                      # (N, BL)
+    w = w_ref[...]                                    # (N, BL, K)
+    coeff = p[:, None] * e                            # (N, BL)
+    denom = jnp.maximum(jnp.sum(coeff, axis=0), 1e-12)  # (BL,)
+    num = jnp.sum(coeff[:, :, None] * w.astype(jnp.float32), axis=0)  # (BL, K)
+    out_ref[0] = (num / denom[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def ra_aggregate(
+    w_seg: jnp.ndarray,
+    p: jnp.ndarray,
+    e: jnp.ndarray,
+    *,
+    block_l: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused R&A aggregation. See ref.ra_aggregate_ref for semantics.
+
+    Args:
+      w_seg: (N, L, K) float32/bf16 client-stacked segments.
+      p:     (N,) float32 weights.
+      e:     (N, N, L) float32 0/1 success mask (sender, receiver, segment).
+      block_l: segments per VMEM tile.
+      interpret: run in Pallas interpret mode (CPU validation; TPU: False).
+    """
+    n, l, k = w_seg.shape
+    assert e.shape == (n, n, l), e.shape
+    bl = min(block_l, l)
+    if l % bl:
+        bl = next(c for c in range(bl, 0, -1) if l % c == 0)
+    grid = (n, l // bl)
+
+    # e arranged receiver-major for clean blocking: (receiver, sender, L).
+    e_rm = jnp.swapaxes(e, 0, 1).astype(jnp.float32)
+    p2 = p.astype(jnp.float32)[:, None]
+
+    return pl.pallas_call(
+        _ra_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda r, s: (0, 0)),          # p
+            pl.BlockSpec((1, n, bl), lambda r, s: (r, 0, s)),   # e (this recv)
+            pl.BlockSpec((n, bl, k), lambda r, s: (0, s, 0)),   # w segments
+        ],
+        out_specs=pl.BlockSpec((1, bl, k), lambda r, s: (r, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, l, k), w_seg.dtype),
+        interpret=interpret,
+    )(p2, e_rm, w_seg)

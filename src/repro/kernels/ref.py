@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+  * ra_aggregate_ref — the paper's adaptive-normalized segment aggregation
+    (eq. 6) over client-stacked segment tensors.
+  * rwkv6_scan_ref   — rwkv6 data-dependent-decay linear attention
+    (sequential token recurrence; ground truth for the chunked kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ra_aggregate_ref(w_seg: jnp.ndarray, p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (6).
+
+    Args:
+      w_seg: (N, L, K) client-stacked model segments.
+      p:     (N,) aggregation weights.
+      e:     (N, N, L) success indicators (sender, receiver, segment).
+
+    Returns:
+      (N, L, K) receiver-major aggregated segments:
+        out[n, l] = sum_m p_m e[m,n,l] w[m,l] / sum_m p_m e[m,n,l]
+    """
+    w = p[:, None, None] * e                        # (N, N, L)
+    denom = jnp.maximum(jnp.sum(w, axis=0), 1e-12)  # (N, L)
+    num = jnp.einsum("mnl,mlk->nlk", w, w_seg.astype(jnp.float32))
+    return (num / denom[:, :, None]).astype(w_seg.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """Sequential rwkv6 recurrence (float32 state).
+
+    r, k, v, w: (B, S, H, D) with w = per-step log decay (<= 0);
+    u: (H, D) bonus.
+    Per head, state S in R^{DxD}:
+      out_t = r_t · (S_{t-1} + diag(exp(u)) k_t v_t^T)
+      S_t   = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+    Returns (B, S, H, D).
+    """
+    b, s, h, d = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inputs):
+        rt, kt, vt, wt = inputs                     # (B, H, D)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        out = jnp.einsum(
+            "bhd,bhde->bhe", rt, state + jnp.exp(uf)[None, :, :, None] * kv
+        )
+        new_state = jnp.exp(wt)[..., None] * state + kv
+        return new_state, out
+
+    state0 = jnp.zeros((b, h, d, d), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    _, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype)
+
+
+def flash_attention_ref(q, k, v, *, scale, causal=True):
+    """Naive causal GQA SDPA oracle for the flash-attention kernel.
+
+    q: (B,S,H,D); k/v: (B,S,KV,D) -> (B,S,H,D).
+    """
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, s, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        idx = jnp.arange(s)
+        mask = idx[:, None] >= idx[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

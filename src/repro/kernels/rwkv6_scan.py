@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: rwkv6 "Finch" chunked linear-attention scan.
+
+Per (batch, head) the recurrence over tokens t (state S in R^{DxD}):
+    out_t = r_t · (S_{t-1} + diag(exp(u)) k_t v_t^T)
+    S_t   = diag(exp(w_t)) S_{t-1} + k_t v_t^T          (w_t = log decay <= 0)
+
+A sequential scan is bandwidth-bound and leaves the MXU idle.  The TPU-native
+formulation processes the sequence in chunks of C tokens: within a chunk the
+token-to-token contribution is a (C x C) decay-masked matmul (MXU-friendly),
+and the chunk-carried state enters via cumulative-decay weights — the same
+algebra as models/ssm.rwkv6_chunked, here fused into one VMEM-resident kernel
+per (batch*head) with the state carried across grid steps in a VMEM scratch
+accumulator (grid iterates chunks innermost, sequentially).
+
+Tiling: grid = (B*H, S/C); blocks are (C, D) tiles of r/k/v/w and a (D, D)
+f32 state scratch.  C=64 and D<=128 keep the working set well under VMEM
+(~6 * C * D * 4B + D^2 * 4B ≈ 250 KB at C=64, D=128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, out_ref, state_ref):
+    """One grid step: (batch*head bh, chunk c) — sequential in c.
+
+    Blocks: r/k/v/w (1, C, D); u (1, D); out (1, C, D);
+    state_ref: (D, D) f32 scratch carrying S across chunks of the same bh.
+    """
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)        # (C, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)        # log decay <= 0
+    u = u_ref[0].astype(jnp.float32)        # (D,)
+    s = state_ref[...]                      # (D, D)
+
+    cum = jnp.cumsum(w, axis=0)             # inclusive cumulative log decay
+    dec_before = jnp.exp(cum - w)           # exp(cum_{t-1})
+    # Inter-chunk: carried-state contribution.
+    out = (r * dec_before) @ s              # (C, D_v)
+    # Intra-chunk: strictly-lower-triangular decay-masked attention.
+    att = (r * jnp.exp(cum - w)) @ (k * jnp.exp(-cum)).T   # (C, C)
+    ct = att.shape[0]
+    idx = jax.lax.iota(jnp.int32, ct)
+    strict = idx[:, None] > idx[None, :]
+    att = jnp.where(strict, att, 0.0)
+    out += att @ v
+    # Diagonal bonus term.
+    diag = jnp.sum(r * jnp.exp(u)[None, :] * k, axis=1)    # (C,)
+    out += diag[:, None] * v
+    out_ref[0] = out.astype(out_ref.dtype)
+
+    # State update for the next chunk.
+    total = cum[-1]                          # (D,)
+    state_ref[...] = (
+        jnp.exp(total)[:, None] * s
+        + (k * jnp.exp(total[None, :] - cum)).T @ v
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Chunk-parallel rwkv6 scan. See ref.rwkv6_scan_ref for semantics.
+
+    r, k, v, w: (B, S, H, D); u: (H, D). Returns (B, S, H, D).
+    """
+    b, s, h, d = r.shape
+    c = min(chunk, s)
+    if s % c:
+        c = next(x for x in range(c, 0, -1) if s % x == 0)
+    nc = s // c
+
+    # (B, S, H, D) -> (B*H, S, D): head-major rows, sequence contiguous.
+    def to_bh(t):
+        return jnp.transpose(t, (0, 2, 1, 3)).reshape(b * h, s, d)
+
+    rb, kb, vb, wb = map(to_bh, (r, k, v, w))
+    ub = jnp.broadcast_to(u[None], (b, h, d)).reshape(b * h, d)
+
+    out = pl.pallas_call(
+        _rwkv6_kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), r.dtype),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(rb, kb, vb, wb, ub)
+
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Production meshes for the multi-pod dry-run.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  TPU v5e targets:
+  single pod : (16, 16)    = 256 chips, axes ('data', 'model')
+  multi-pod  : (2, 16, 16) = 512 chips, axes ('pod', 'data', 'model')
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(*, multi_pod: bool = False):
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,196 @@
+"""Sharding rules: parameter/cache/batch PartitionSpecs per (arch, shape, mesh).
+
+FSDP-style scheme (DESIGN.md §5): every weight shards its natural parallel
+dim over 'model' (heads / experts / ff / vocab) and the other large dim over
+the data axes (ZeRO-3 analogue).  Under multi-pod the data axes are
+('pod', 'data').  GSPMD pads non-divisible dims (e.g. whisper's 51865
+vocab over 16 shards), so rules do not need divisibility checks.
+
+Layer-stacked leaves carry 1-2 leading scan dims which are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+# leaf name -> (spec for the trailing dims), expressed with placeholders
+# 'D' = data axes, 'M' = 'model'.
+_RULES: dict[str, tuple] = {
+    # embedding / unembedding
+    "table": ("M", "D"),
+    # attention
+    "wq": ("D", "M"),
+    "wk": ("D", "M"),
+    "wv": ("D", "M"),
+    "wo": ("M", "D"),
+    "bq": ("M",),
+    "bk": ("M",),
+    "bv": ("M",),
+    # mlp
+    "w_up": ("D", "M"),
+    "w_gate": ("D", "M"),
+    "w_down": ("M", "D"),
+    # moe (leading expert dim -> model axis)
+    "router": ("D", None),
+    # ssm
+    "w_in": ("D", "M"),
+    "w_bc": ("M", None),
+    "w_dt": ("M", None),
+    "log_a": ("M", None),
+    "d_skip": ("M",),
+    "w_out": ("M", "D"),
+    "dt_bias": (None,),
+    # rwkv6
+    "w_r": ("D", "M"),
+    "w_k": ("D", "M"),
+    "w_v": ("D", "M"),
+    "w_g": ("D", "M"),
+    "w_decay": ("D", "M"),
+    "decay_bias": ("M",),
+    "bonus_u": ("M", None),
+    # norms / misc
+    "scale": (None,),
+    "bias": (None,),
+    "gate": (None,),
+    "step": (),
+}
+
+# MoE expert-stacked weights (detected by rank): (E, D, F) / (E, F, D).
+_MOE_3D = {"w_up": ("M", "D", None), "w_gate": ("M", "D", None),
+           "w_down": ("M", None, "D")}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return p.key
+    return ""
+
+
+# mesh axis sizes of the production meshes (DESIGN.md §5)
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_prod(entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return int(np.prod([AXIS_SIZES[a] for a in entry]))
+    return AXIS_SIZES[entry]
+
+
+def _fit(spec_entries, shape) -> P:
+    """Drop spec entries whose mesh extent does not divide the dim
+    (explicit in_shardings require divisibility; GSPMD padding is only for
+    propagated shardings)."""
+    fitted = []
+    for entry, dim in zip(spec_entries, shape):
+        fitted.append(entry if dim % _axis_prod(entry) == 0 else None)
+    return P(*fitted)
+
+
+def param_specs(params_shape: Pytree, *, data_axes,
+                profile: str = "fsdp") -> Pytree:
+    """PartitionSpec tree matching a params (or opt-state) shape tree.
+
+    data_axes: 'data' or ('pod', 'data').
+    profile:
+      'fsdp'    — weights sharded over BOTH model and data axes (ZeRO-3;
+                  training default: optimizer states dominate memory).
+      'tp_only' — weights sharded over 'model' only, replicated across data
+                  (serving: kills the per-step weight all-gather, §Perf).
+    """
+
+    def resolve(sym):
+        if sym == "D":
+            return None if profile == "tp_only" else data_axes
+        if sym == "M":
+            return "model"
+        return sym
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        rule = _RULES.get(name)
+        if rule is None:
+            return P()  # replicate unknowns
+        base = len(rule)
+        # MoE expert-stacked: rank exceeds the 2D rule by >= 1 with the
+        # "moe" ancestor in the path.
+        in_moe = any(
+            isinstance(p, jax.tree_util.DictKey) and p.key == "moe" for p in path
+        )
+        if in_moe and name in _MOE_3D:
+            rule = _MOE_3D[name]
+            base = len(rule)
+        n_scan = ndim - base
+        if n_scan < 0:  # e.g. scalar variants
+            return P()
+        entries = [None] * n_scan + [resolve(s) for s in rule]
+        return _fit(entries, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_specs(batch_shape: Pytree, *, data_axes, shard_batch: bool) -> Pytree:
+    """Token/modal batches: batch dim over data axes (or replicated)."""
+    dp = data_axes if shard_batch else None
+
+    def spec_for(leaf):
+        return _fit([dp] + [None] * (len(leaf.shape) - 1), leaf.shape)
+
+    return jax.tree_util.tree_map(spec_for, batch_shape)
+
+
+def cache_specs(cache_shape: Pytree, *, data_axes, shard_batch: bool,
+                kv_shard: str = "heads") -> Pytree:
+    """Decode caches.
+
+    Layout per leaf (see transformer.init_cache):
+      k/v        (NL[, NS], B, T, KV, Dh)
+      xk/xv      (NL/G, B, T_src, KV, Dh)
+      rwkv_state (NL, B, H, Dh, Dh)
+      ssm_state  (NL, B, Di, N)
+
+    shard_batch=True (decode_32k): batch over data, kv-heads over model.
+    shard_batch=False (long_500k, batch=1): SEQUENCE over data (context
+    parallelism), kv-heads over model.
+    """
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        b_ax = data_axes if shard_batch else None
+        if name in ("k", "v", "xk", "xv"):
+            lead = nd - 4  # scan dims before (B, T, KV, Dh)
+            t_ax = None if shard_batch else data_axes
+            kv, dh = leaf.shape[-2], leaf.shape[-1]
+            # kv_shard='seq': 'model' on the SEQUENCE dim — attention
+            # reduces over T locally (context parallel; §Perf hillclimb 2).
+            # kv_shard='heads': 'model' on kv-heads when divisible, else on
+            # head_dim — a replicated cache would not fit 16 GB/chip (dbrx
+            # decode_32k: 687 GB global).
+            if kv_shard == "seq" and shard_batch:
+                entries = [None] * lead + [b_ax, "model", None, None]
+            elif kv % AXIS_SIZES["model"] == 0:
+                entries = [None] * lead + [b_ax, t_ax, "model", None]
+            else:
+                entries = [None] * lead + [b_ax, t_ax, None, "model"]
+            return _fit(entries, leaf.shape)
+        if name == "rwkv_state":
+            h = leaf.shape[2]
+            if h % AXIS_SIZES["model"] == 0:
+                return _fit([None, b_ax, "model", None, None], leaf.shape)
+            return _fit([None, b_ax, None, None, "model"], leaf.shape)
+        if name == "ssm_state":
+            return _fit([None, b_ax, "model", None], leaf.shape)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)

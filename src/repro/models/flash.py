@@ -1,0 +1,128 @@
+"""Flash attention with custom VJP (§Perf hillclimb #1).
+
+`_sdpa_chunked` (layers.py) removes the O(S²) score tensor from the FORWARD,
+but plain autodiff through the block scan still stores every block's
+probabilities as residuals — O(S²) again in the backward. This module adds
+the flash-attention backward: save only (q, k, v, out, per-row logsumexp) and
+RECOMPUTE block probabilities while accumulating dq/dk/dv.
+
+Residual memory per layer drops from O(B·H·S²) to O(B·H·S·Dh).
+
+Shapes: q (B,S,H,Dh); k/v (B,S,KV,Dh), GQA via G = H // KV.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _block_mask(s, c, jblk, *, causal, window, q_off=0):
+    q_idx = jnp.arange(s) + q_off
+    k_idx = jblk * c + jnp.arange(c)
+    mask = jnp.ones((s, c), bool)
+    if causal:
+        mask &= q_idx[:, None] >= k_idx[None, :]
+    if window is not None:
+        mask &= q_idx[:, None] - k_idx[None, :] < window
+    return mask
+
+
+def _fwd(q, k, v, scale, causal, window, chunk, unroll):
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    c = min(chunk, s)
+    if s % c:
+        c = next(x for x in range(c, 0, -1) if s % x == 0)
+    nc = s // c
+    qr = q.reshape(b, s, kv, g, dh)
+    kc = jnp.swapaxes(k.reshape(b, nc, c, kv, dh), 0, 1)
+    vc = jnp.swapaxes(v.reshape(b, nc, c, kv, dh), 0, 1)
+
+    def block(carry, inputs):
+        m_prev, denom, acc = carry
+        kb, vb, jblk = inputs
+        logits = jnp.einsum("bskgd,bckd->bkgsc", qr, kb).astype(jnp.float32)
+        logits *= scale
+        mask = _block_mask(s, c, jblk, causal=causal, window=window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m_prev, logits.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        denom = denom * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, denom, acc), None
+
+    m0 = jnp.full((b, kv, g, s), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((b, kv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, s, dh), jnp.float32)
+    (m, denom, acc), _ = jax.lax.scan(
+        block, (m0, d0, a0), (kc, vc, jnp.arange(nc)),
+        unroll=nc if unroll else 1)
+    denom = jnp.maximum(denom, 1e-30)
+    out = (acc / denom[..., None])
+    lse = m + jnp.log(denom)                       # (B,KV,G,S) logsumexp
+    out_bshd = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, s, h, dh)
+    return out_bshd.astype(q.dtype), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, scale, causal=True, window=None, chunk=512,
+                    unroll=False):
+    """Memory-efficient SDPA with flash backward. Returns (B,S,H,Dh)."""
+    out, _ = _fwd(q, k, v, scale, causal, window, chunk, unroll)
+    return out
+
+
+def _fwd_rule(q, k, v, scale, causal, window, chunk, unroll):
+    out, lse = _fwd(q, k, v, scale, causal, window, chunk, unroll)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_rule(scale, causal, window, chunk, unroll, res, dout):
+    q, k, v, out, lse = res
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    c = min(chunk, s)
+    if s % c:
+        c = next(x for x in range(c, 0, -1) if s % x == 0)
+    nc = s // c
+    qr = q.reshape(b, s, kv, g, dh)
+    do = dout.reshape(b, s, kv, g, dh).astype(jnp.float32)
+    o = out.reshape(b, s, kv, g, dh).astype(jnp.float32)
+    # delta_i = sum_d do_i * o_i  (row-wise correction term)
+    delta = jnp.sum(do * o, axis=-1)                # (B,S,KV,G)
+    delta = jnp.transpose(delta, (0, 2, 3, 1))      # (B,KV,G,S)
+    kc = jnp.swapaxes(k.reshape(b, nc, c, kv, dh), 0, 1)
+    vc = jnp.swapaxes(v.reshape(b, nc, c, kv, dh), 0, 1)
+    do_t = jnp.transpose(do, (0, 2, 3, 1, 4))       # (B,KV,G,S,Dh)
+
+    def block(dq_acc, inputs):
+        kb, vb, jblk = inputs
+        logits = jnp.einsum("bskgd,bckd->bkgsc", qr, kb).astype(jnp.float32)
+        logits *= scale
+        mask = _block_mask(s, c, jblk, causal=causal, window=window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jnp.exp(logits - lse[..., None])        # exact probs (B,KV,G,S,C)
+        dv_b = jnp.einsum("bkgsc,bkgsd->bckd", p, do_t)
+        dp = jnp.einsum("bkgsd,bckd->bkgsc", do_t, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bkgsc,bckd->bskgd", ds,
+                                     kb.astype(jnp.float32))
+        dk_b = jnp.einsum("bkgsc,bskgd->bckd", ds, qr.astype(jnp.float32))
+        return dq_acc, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((b, s, kv, g, dh), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+        block, dq0, (kc, vc, jnp.arange(nc)), unroll=nc if unroll else 1)
+    dk = jnp.swapaxes(dk_blocks, 0, 1).reshape(b, s, kv, dh)
+    dv = jnp.swapaxes(dv_blocks, 0, 1).reshape(b, s, kv, dh)
+    return (dq.reshape(b, s, h, dh).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)

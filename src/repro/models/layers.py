@@ -1,0 +1,330 @@
+"""Transformer building blocks — pure JAX (no flax), init/apply pairs.
+
+Conventions:
+  * every `init_*` returns a (nested dict) pytree of jnp arrays;
+  * every `apply_*` is a pure function (params, inputs, ...) -> outputs;
+  * activations are (batch, seq, d_model) unless stated otherwise;
+  * attention supports GQA (n_kv_heads <= n_heads), RoPE, optional QKV bias,
+    optional sliding window, and a KV cache for single-token decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def _dense_init(key, d_in, d_out, dtype):
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * params["scale"]
+
+
+def init_layernorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return y * params["scale"] + params["bias"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0):
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + RoPE + optional bias/window + KV cache)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    causal: bool = True
+    sliding_window: int | None = None
+
+
+def init_attention(key, cfg: AttnCfg, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 4)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": _dense_init(ks[0], d, h * dh, dtype),
+        "wk": _dense_init(ks[1], d, kv * dh, dtype),
+        "wv": _dense_init(ks[2], d, kv * dh, dtype),
+        "wo": _dense_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    return p
+
+
+def _qkv(params, cfg: AttnCfg, x, positions):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kv, dh)
+    v = v.reshape(b, s, kv, dh)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, *, scale):
+    """q: (B,S,H,Dh)  k/v: (B,T,KV,Dh) grouped-query attention."""
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q = q.reshape(b, s, kv, g, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def _sdpa_chunked(q, k, v, *, scale, causal, window, chunk, unroll=False):
+    """Memory-efficient attention: online softmax over key blocks.
+
+    Never materializes the (B, H, S, S) score tensor — peak working set is
+    one (B, H, S, C) block.  q: (B,S,H,Dh); k/v: (B,S,KV,Dh).
+    """
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    c = min(chunk, s)
+    if s % c:
+        c = next(x for x in range(c, 0, -1) if s % x == 0)
+    nc = s // c
+    qr = q.reshape(b, s, kv, g, dh)
+    kc = k.reshape(b, nc, c, kv, dh)
+    vc = v.reshape(b, nc, c, kv, dh)
+    q_idx = jnp.arange(s)
+
+    def block(carry, inputs):
+        m_prev, denom, acc = carry
+        kb, vb, jblk = inputs                          # (B,C,KV,Dh), scalar
+        logits = jnp.einsum("bskgd,bckd->bkgsc", qr, kb).astype(jnp.float32)
+        logits = logits * scale
+        k_idx = jblk * c + jnp.arange(c)
+        mask = jnp.ones((s, c), bool)
+        if causal:
+            mask &= q_idx[:, None] >= k_idx[None, :]
+        if window is not None:
+            mask &= q_idx[:, None] - k_idx[None, :] < window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m_prev, logits.max(-1))    # (B,KV,G,S)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[..., None])         # (B,KV,G,S,C)
+        denom = denom * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, denom, acc), None
+
+    m0 = jnp.full((b, kv, g, s), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((b, kv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, s, dh), jnp.float32)
+    (m, denom, acc), _ = jax.lax.scan(
+        block, (m0, d0, a0),
+        (jnp.swapaxes(kc, 0, 1), jnp.swapaxes(vc, 0, 1),
+         jnp.arange(nc)),
+        unroll=nc if unroll else 1,
+    )
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def attention(params, cfg: AttnCfg, x, *, positions=None, attn_mask=None,
+              impl: str = "naive", chunk: int = 512, unroll: bool = False):
+    """Full-sequence attention (training / prefill).
+
+    attn_mask: optional (B, S, S) bool (True = attend); causal/window masks
+    are composed in automatically.
+    impl: 'naive' (materializes (S,S) scores) or 'chunked' (online-softmax
+    over key blocks — the flash-attention access pattern, §Perf iteration).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q, k, v = _qkv(params, cfg, x, positions)
+    if impl == "flash" and attn_mask is None:
+        from repro.models.flash import flash_attention
+
+        out = flash_attention(
+            q, k, v, 1.0 / np.sqrt(cfg.head_dim), cfg.causal,
+            cfg.sliding_window, chunk, unroll,
+        )
+        return out.reshape(b, s, -1) @ params["wo"]
+    if impl == "chunked" and attn_mask is None:
+        out = _sdpa_chunked(
+            q, k, v, scale=1.0 / np.sqrt(cfg.head_dim), causal=cfg.causal,
+            window=cfg.sliding_window, chunk=chunk, unroll=unroll,
+        )
+        return out.reshape(b, s, -1) @ params["wo"]
+    idx = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if cfg.causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if cfg.sliding_window is not None:
+        mask &= idx[:, None] - idx[None, :] < cfg.sliding_window
+    mask = jnp.broadcast_to(mask[None], (b, s, s))
+    if attn_mask is not None:
+        mask &= attn_mask
+    out = _sdpa(q, k, v, mask, scale=1.0 / np.sqrt(cfg.head_dim))
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+def cross_attention(params, cfg: AttnCfg, x, kv_src, *, kv_mask=None):
+    """Cross-attention: queries from x (B,S,D), keys/values from kv_src (B,T,D)."""
+    b, s, _ = x.shape
+    t = kv_src.shape[1]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (kv_src @ params["wk"]).reshape(b, t, kv, dh)
+    v = (kv_src @ params["wv"]).reshape(b, t, kv, dh)
+    if cfg.qkv_bias:
+        q = q + params["bq"].reshape(h, dh)
+        k = k + params["bk"].reshape(kv, dh)
+        v = v + params["bv"].reshape(kv, dh)
+    mask = None
+    if kv_mask is not None:
+        mask = jnp.broadcast_to(kv_mask[:, None, :], (b, s, t))
+    out = _sdpa(q, k, v, mask, scale=1.0 / np.sqrt(dh))
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+# --------------------------- KV-cache decode -------------------------------
+def init_kv_cache(batch, max_len, cfg: AttnCfg, dtype=jnp.float32):
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, dh), dtype),
+        "v": jnp.zeros((batch, max_len, kv, dh), dtype),
+    }
+
+
+def decode_attention(params, cfg: AttnCfg, x, cache, pos, *,
+                     rope_pos=None, full_cache: bool = False):
+    """One-token decode step.
+
+    x: (B, 1, D); cache: dict k/v (B, T, KV, Dh); pos: scalar int32 — cache
+    WRITE position (for a wrapped sliding-window cache, abs_pos % window).
+    rope_pos: absolute position for RoPE (defaults to pos).
+    full_cache: True when every cache slot holds a valid (window) entry, so
+    no causal mask against `pos` is needed (wrapped-window steady state).
+    Returns (out (B,1,D), new_cache).
+    """
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    rp = pos if rope_pos is None else rope_pos
+    positions = jnp.broadcast_to(rp[None, None], (b, 1)).astype(jnp.int32)
+    q, k_new, v_new = _qkv(params, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    if full_cache:
+        mask = jnp.ones((b, 1, t), bool)
+    else:
+        idx = jnp.arange(t)
+        valid = idx <= pos
+        if cfg.sliding_window is not None:
+            valid &= idx > pos - cfg.sliding_window
+        mask = jnp.broadcast_to(valid[None, None, :], (b, 1, t))
+    out = _sdpa(q, k, v, mask, scale=1.0 / np.sqrt(cfg.head_dim))
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model, d_ff, act: str, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": _dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": _dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = _dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params, x, act: str):
+    up = x @ params["w_up"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    elif act == "relu":
+        h = jax.nn.relu(up)
+    else:
+        raise ValueError(act)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab, d_model, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Tied unembedding: logits in float32 for loss stability."""
+    return (x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T)

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer — GShard-style capacity dispatch (TPU-native).
+
+Dense one-hot dispatch/combine einsums give static shapes (no ragged
+all-to-all), the canonical TPU pattern: tokens are routed to
+``capacity = ceil(T * top_k / E) * capacity_factor`` slots per expert;
+overflow tokens are dropped (their combine weight is 0), underflow slots are
+zero.  Compute scales with top_k (active experts), not E.
+
+Experts are stored stacked: w_up/w_gate (E, D, F), w_down (E, F, D) — the
+leading expert dim shards over the mesh 'model' axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    act: str = "swiglu"
+    capacity_factor: float = 1.25
+    group_size: int = 1024   # tokens per routing group (bounds the (g,E,C)
+                             # dispatch tensor: memory ~ g^2 * k * cf per group)
+
+
+def init_moe(key, cfg: MoECfg, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale_in = 1.0 / np.sqrt(d)
+    scale_out = 1.0 / np.sqrt(f)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[1], (e, d, f)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (e, f, d)) * scale_out).astype(dtype),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, f)) * scale_in).astype(dtype)
+    return p
+
+
+def _group_size(n_tokens: int, cfg: MoECfg) -> int:
+    g = min(cfg.group_size, n_tokens)
+    if n_tokens % g:  # largest divisor of n_tokens not exceeding group_size
+        g = next(c for c in range(g, 0, -1) if n_tokens % c == 0)
+    return g
+
+
+def _capacity(group: int, cfg: MoECfg) -> int:
+    c = int(np.ceil(group * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(c, 1)
+
+
+def moe_layer(params: Pytree, cfg: MoECfg, x: jnp.ndarray):
+    """x: (B, S, D) -> (y (B, S, D), aux) with load-balance aux loss.
+
+    Tokens are routed within groups of `group_size` (GShard grouping): the
+    dispatch/combine tensors are (G, g, E, C) with C = ceil(g*k/E*cf), so
+    memory stays linear in total tokens.  aux = E * sum_e (fraction_tokens_e
+    * mean_router_prob_e) (Switch-style), averaged over groups.
+    """
+    b, s, d = x.shape
+    t = b * s
+    g = _group_size(t, cfg)
+    ng = t // g
+    cap = _capacity(g, cfg)
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(ng, g, d)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)      # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (G, g, K)
+    # Renormalize the selected gates (dbrx/mixtral convention).
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Expert one-hot per selection: (G, g, K, E)
+    sel = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    # Position of each (token, k) within its expert queue (per group):
+    sel_flat = sel.reshape(ng, g * k, e)                      # token-major rows
+    pos_in_expert = jnp.cumsum(sel_flat, axis=1) - sel_flat   # (G, g*K, E)
+    pos = jnp.sum(pos_in_expert * sel_flat, axis=-1).reshape(ng, g, k)
+    keep = pos < cap                                          # overflow drop
+    gate_vals = gate_vals * keep
+
+    # Dispatch (G, g, E, C) and combine weights.
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", sel, pos_oh)     # 0/1
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gate_vals, sel, pos_oh)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xt)
+
+    up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    if cfg.act in ("swiglu", "geglu"):
+        gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+
+    # Switch load-balance loss (mean over groups).
+    frac_tokens = jnp.mean(sel.sum(2), axis=(0, 1))           # (E,)
+    mean_probs = jnp.mean(probs, axis=(0, 1))                 # (E,)
+    aux = e * jnp.sum(frac_tokens * mean_probs)
+    return y.reshape(b, s, d), aux

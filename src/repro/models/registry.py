@@ -1,0 +1,140 @@
+"""Model registry: ModelCfg -> (init, loss, train_step, serve_step, cache).
+
+The train/serve step functions here are MESH-AGNOSTIC pure functions;
+`repro.launch` binds them to meshes with in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import optimizers
+
+Pytree = Any
+
+
+class ModelBundle(NamedTuple):
+    cfg: T.ModelCfg
+    init: Callable[[jax.Array], Pytree]
+    loss_fn: Callable[..., tuple[jnp.ndarray, Pytree]]
+    train_step: Callable[..., tuple[Pytree, Pytree]]
+    serve_step: Callable[..., tuple[jnp.ndarray, Pytree]]
+    prefill_step: Callable[..., tuple[jnp.ndarray, Pytree]]
+    init_cache: Callable[..., Pytree]
+    optimizer: optimizers.Optimizer
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token CE in float32. logits: (B,S,V); labels: (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_cross_entropy(table: jnp.ndarray, hidden: jnp.ndarray,
+                          labels: jnp.ndarray, chunk: int,
+                          unroll: bool = False) -> jnp.ndarray:
+    """Vocab-chunked CE: never materializes (B, S, V) logits (§Perf).
+
+    Streaming logsumexp over vocabulary chunks; the gold logit is gathered
+    from whichever chunk contains the label.
+    hidden: (B, S, D) final normed states; table: (V, D) tied embedding.
+    """
+    b, s, d = hidden.shape
+    v = table.shape[0]
+    c = min(chunk, v)
+    pad = (-v) % c
+    tpad = jnp.pad(table.astype(jnp.float32), ((0, pad), (0, 0)))
+    nc = (v + pad) // c
+    h = hidden.astype(jnp.float32)
+
+    def block(carry, i):
+        m_prev, denom, gold = carry
+        tc = jax.lax.dynamic_slice_in_dim(tpad, i * c, c, axis=0)   # (C, D)
+        logits = h @ tc.T                                           # (B, S, C)
+        base = i * c
+        idx = base + jnp.arange(c)
+        valid = idx < v
+        logits = jnp.where(valid[None, None], logits, -jnp.inf)
+        m_new = jnp.maximum(m_prev, logits.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        denom = denom * corr + jnp.exp(logits - m_new[..., None]).sum(-1)
+        in_chunk = (labels >= base) & (labels < base + c)
+        local = jnp.clip(labels - base, 0, c - 1)
+        g = jnp.take_along_axis(logits, local[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_chunk, g, gold)
+        return (m_new, denom, gold), None
+
+    m0 = jnp.full((b, s), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((b, s), jnp.float32)
+    g0 = jnp.zeros((b, s), jnp.float32)
+    (m, denom, gold), _ = jax.lax.scan(
+        block, (m0, d0, g0), jnp.arange(nc), unroll=nc if unroll else 1
+    )
+    logz = m + jnp.log(jnp.maximum(denom, 1e-30))
+    return jnp.mean(logz - gold)
+
+
+def needs_modal(cfg: T.ModelCfg) -> bool:
+    return cfg.family in ("enc_dec", "vlm")
+
+
+def build(cfg: T.ModelCfg, *, optimizer: str = "adamw",
+          lr: float = 3e-4, aux_weight: float = 0.01) -> ModelBundle:
+    opt = optimizers.get(optimizer, lr)
+
+    def init(key):
+        return T.init_params(key, cfg)
+
+    def loss_fn(params, batch, *, window=None):
+        kwargs = {}
+        if needs_modal(cfg):
+            kwargs["modal_embeds"] = batch["modal_embeds"]
+        if cfg.loss_vocab_chunk:
+            hidden, aux = T.forward(params, cfg, batch["tokens"],
+                                    window=window, return_hidden=True, **kwargs)
+            loss = chunked_cross_entropy(
+                params["embed"]["table"], hidden[:, :-1], batch["tokens"][:, 1:],
+                cfg.loss_vocab_chunk, unroll=cfg.scan_unroll,
+            )
+        else:
+            logits, aux = T.forward(params, cfg, batch["tokens"],
+                                    window=window, **kwargs)
+            loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+        total = loss + aux_weight * aux
+        return total, {"loss": loss, "aux": aux}
+
+    def train_step(state, batch, *, window=None):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, window=window), has_aux=True
+        )(state["params"])
+        new_params, new_opt = opt.update(state["params"], grads, state["opt"])
+        return dict(params=new_params, opt=new_opt), metrics
+
+    def serve_step(params, cache, token, pos, *, window=None,
+                   abs_pos=None, full_cache=False):
+        return T.serve_step(params, cfg, cache, token, pos, window=window,
+                            abs_pos=abs_pos, full_cache=full_cache)
+
+    def prefill_step(params, batch, *, window=None):
+        kwargs = {}
+        if needs_modal(cfg):
+            kwargs["modal_embeds"] = batch["modal_embeds"]
+        return T.prefill(params, cfg, batch["tokens"], window=window, **kwargs)
+
+    def init_cache(batch, max_len, *, window=None):
+        return T.init_cache(cfg, batch, max_len, window=window)
+
+    return ModelBundle(cfg, init, loss_fn, train_step, serve_step, prefill_step,
+                       init_cache, opt)
+
+
+def init_state(bundle: ModelBundle, key: jax.Array) -> Pytree:
+    params = bundle.init(key)
+    return {"params": params, "opt": bundle.optimizer.init(params)}

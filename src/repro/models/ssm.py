@@ -1,0 +1,270 @@
+"""State-space / linear-attention sequence mixers: Mamba-style selective SSM
+(for hymba's parallel SSM heads) and RWKV-6 "Finch" (data-dependent decay).
+
+Both provide:
+  * a full-sequence `*_seq` form (training / prefill) built on
+    `jax.lax.associative_scan` (SSM) or chunk-wise `lax.scan` (rwkv6), and
+  * a single-token `*_step` form carrying explicit recurrent state (decode —
+    O(1) per token, enabling the long_500k shape natively).
+
+The chunked rwkv6 path has a Pallas kernel twin in `repro.kernels.rwkv6_scan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (diagonal A, data-dependent B, C, dt)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_model: int
+    d_state: int = 16
+    expand: int = 1          # d_inner = expand * d_model
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+
+def init_ssm(key, cfg: SSMCfg, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 6)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    s = 1.0 / np.sqrt(d)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, di)) * s).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d, di)) * s).astype(dtype),
+        "w_bc": (jax.random.normal(ks[2], (di, 2 * n)) / np.sqrt(di)).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (di, 1)) / np.sqrt(di)).astype(dtype),
+        # log A init in [-~4.6, 0): stable decays
+        "log_a": jnp.log(
+            jnp.linspace(1.0, float(n), n, dtype=jnp.float32)
+        )[None, :].repeat(di, 0).astype(dtype) * -1.0,
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": (jax.random.normal(ks[4], (di, d)) / np.sqrt(di)).astype(dtype),
+        "dt_bias": jnp.zeros((1,), dtype),
+    }
+
+
+def _ssm_terms(params, cfg: SSMCfg, u):
+    """u: (B, S, Di). Returns decay a (B,S,Di,N) and input bx (B,S,Di,N).
+
+    All recurrence terms are float32 regardless of param dtype (the scan is
+    numerically sensitive; callers cast outputs back to the model dtype).
+    """
+    n = cfg.d_state
+    u = u.astype(jnp.float32)
+    bc = u @ params["w_bc"].astype(jnp.float32)               # (B,S,2N)
+    b_t, c_t = jnp.split(bc, 2, axis=-1)                      # (B,S,N) each
+    # dt is a scalar per token (broadcast over channels) — selective timescale
+    dt = jax.nn.softplus(
+        u @ params["w_dt"].astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )                                                          # (B,S,1)
+    a = jnp.exp(params["log_a"].astype(jnp.float32))          # (Di, N) magnitudes
+    decay = jnp.exp(-dt[..., None] * a[None, None])           # (B,S,Di,N)
+    bx = (dt * u)[..., None] * b_t[:, :, None, :]             # (B,S,Di,N)
+    return decay, bx, c_t
+
+
+def ssm_seq(params: Pytree, cfg: SSMCfg, x: jnp.ndarray,
+            *, return_state: bool = False):
+    """Full-sequence selective SSM. x: (B, S, D) -> (B, S, D)[, final state]."""
+    u = jax.nn.silu(x @ params["w_in"])                        # (B,S,Di)
+    gate = jax.nn.silu(x @ params["w_gate"])
+    decay, bx, c_t = _ssm_terms(params, cfg, u)
+
+    # Linear recurrence h_t = decay_t * h_{t-1} + bx_t via associative scan.
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (decay, bx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_t)
+    y = y + u.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    out = ((y * gate.astype(jnp.float32))
+           @ params["w_out"].astype(jnp.float32)).astype(x.dtype)
+    if return_state:
+        return out, h[:, -1]                                   # (B, Di, N)
+    return out
+
+
+def init_ssm_state(batch, cfg: SSMCfg, dtype=jnp.float32):
+    return jnp.zeros((batch, cfg.d_inner, cfg.d_state), dtype)
+
+
+def ssm_step(params: Pytree, cfg: SSMCfg, x: jnp.ndarray, state: jnp.ndarray):
+    """Single-token step. x: (B, 1, D); state: (B, Di, N)."""
+    u = jax.nn.silu(x @ params["w_in"])
+    gate = jax.nn.silu(x @ params["w_gate"])
+    decay, bx, c_t = _ssm_terms(params, cfg, u)
+    new_state = decay[:, 0] * state.astype(jnp.float32) + bx[:, 0]  # (B,Di,N)
+    y = jnp.einsum("bdn,bn->bd", new_state, c_t[:, 0])[:, None]
+    y = y + u.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    out = ((y * gate.astype(jnp.float32))
+           @ params["w_out"].astype(jnp.float32)).astype(x.dtype)
+    return out, new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 "Finch": data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RWKV6Cfg:
+    d_model: int
+    n_heads: int = 16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_rwkv6(key, cfg: RWKV6Cfg, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 7)
+    d = cfg.d_model
+    s = 1.0 / np.sqrt(d)
+    return {
+        "w_r": (jax.random.normal(ks[0], (d, d)) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, d)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "w_g": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "w_decay": (jax.random.normal(ks[4], (d, d)) * s * 0.1).astype(dtype),
+        "decay_bias": jnp.full((d,), -2.0, dtype),  # sigmoid-ish slow decay
+        "bonus_u": (jax.random.normal(ks[5], (cfg.n_heads, cfg.head_dim)) * 0.1).astype(dtype),
+        "w_out": (jax.random.normal(ks[6], (d, d)) * s).astype(dtype),
+    }
+
+
+def _rkvwg(params, cfg: RWKV6Cfg, x):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    r = (x @ params["w_r"]).reshape(b, s, h, dh)
+    k = (x @ params["w_k"]).reshape(b, s, h, dh)
+    v = (x @ params["w_v"]).reshape(b, s, h, dh)
+    g = jax.nn.silu(x @ params["w_g"])
+    # Data-dependent decay w_t in (0, 1): exp(-exp(...)) as in RWKV-6.
+    wlog = -jnp.exp(
+        (x @ params["w_decay"] + params["decay_bias"]).astype(jnp.float32)
+    )                                                          # log decay <= 0
+    # Clamp per-step log decay so a 64-token chunk's cumulative decay stays
+    # inside float32 range in the two-factor chunked form (exp(-cum) can
+    # otherwise overflow); e^{-60} is numerically zero, semantics preserved.
+    wlog = jnp.maximum(wlog, -60.0 / 64.0)
+    w = wlog.reshape(b, s, h, dh)
+    return r, k, v, g, w
+
+
+def rwkv6_seq(params: Pytree, cfg: RWKV6Cfg, x: jnp.ndarray,
+              *, chunk: int = 64, use_kernel: bool = False,
+              return_state: bool = False, unroll: bool = False):
+    """Full-sequence rwkv6 time-mix. x: (B, S, D) -> (B, S, D).
+
+    Recurrence per head (state S: (Dh_k, Dh_v)):
+      out_t = r_t · (S_{t-1} + diag(exp(u)) k_t v_t^T)
+      S_t   = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+    computed chunk-parallel: within a chunk the contribution of earlier
+    in-chunk tokens is a masked decay-weighted attention; the carried state
+    enters through cumulative decays.
+    """
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    r, k, v, g, w = _rkvwg(params, cfg, x)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y = kops.rwkv6_scan(r, k, v, w, params["bonus_u"].astype(jnp.float32))
+        state = None
+    else:
+        y, state = rwkv6_chunked(r, k, v, w, params["bonus_u"].astype(jnp.float32),
+                                 chunk=chunk, return_state=True, unroll=unroll)
+    y = y.reshape(b, s, d)
+    out = (y * g) @ params["w_out"]
+    if return_state:
+        if state is None:  # kernel path: recompute state via reference
+            _, state = rwkv6_chunked(
+                r, k, v, w, params["bonus_u"].astype(jnp.float32),
+                chunk=chunk, return_state=True)
+        return out, state
+    return out
+
+
+def rwkv6_chunked(r, k, v, w, u, *, chunk: int = 64, return_state: bool = False,
+                  unroll: bool = False):
+    """Reference chunked scan (pure jnp; mirrors kernels/ref.py).
+
+    r,k,v,w: (B, S, H, Dh) with w = log-decay (<= 0); u: (H, Dh) bonus.
+    Returns (B, S, H, Dh) [, final state (B, H, Dh, Dh)].
+    """
+    b, s, h, dh = r.shape
+    chunk = min(chunk, s)
+    if s % chunk:  # pick the largest divisor of s not exceeding `chunk`
+        chunk = next(c for c in range(chunk, 0, -1) if s % c == 0)
+    nc = s // chunk
+    rc = r.reshape(b, nc, chunk, h, dh).astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, h, dh).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, h, dh).astype(jnp.float32)
+    wc = w.reshape(b, nc, chunk, h, dh).astype(jnp.float32)
+
+    def per_chunk(state, inputs):
+        rc, kc, vc, wc = inputs                     # (B, C, H, Dh)
+        cum = jnp.cumsum(wc, axis=1)                # inclusive cumulative log decay
+        total = cum[:, -1:]                         # (B,1,H,Dh)
+        # Inter-chunk: state contribution. decay before token t: cum_{t-1}
+        dec_before = jnp.exp(cum - wc)              # exp(cum_{t-1})
+        out_state = jnp.einsum("bchd,bhde->bche", rc * dec_before, state)
+        # Intra-chunk: token j -> t (j < t): decay exp(cum_{t-1} - cum_j)
+        ratio_t = cum - wc                          # (B,C,H,Dh)
+        att = jnp.einsum("bchd,bjhd->bhcj",
+                         rc * jnp.exp(ratio_t),
+                         kc * jnp.exp(-cum))
+        idx = jnp.arange(chunk)
+        strict = idx[:, None] > idx[None, :]
+        att = att * strict[None, None]
+        # Diagonal (bonus) term: r_t · diag(exp(u)) k_t v_t
+        diag = jnp.einsum("bchd,bchd->bch", rc * jnp.exp(u)[None, None], kc)
+        out = (
+            out_state
+            + jnp.einsum("bhcj,bjhe->bche", att, vc)
+            + diag[..., None] * vc
+        )
+        # State update: S' = exp(total) S + sum_j exp(total - cum_j) k_j v_j^T
+        new_state = jnp.exp(total[:, 0, :, :, None]) * state + jnp.einsum(
+            "bjhd,bjhe->bhde", kc * jnp.exp(total - cum), vc
+        )
+        return new_state, out
+
+    state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, wc))
+    final_state, out = jax.lax.scan(per_chunk, state0, inputs,
+                                    unroll=True if unroll else 1)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, dh)
+    out = out.astype(r.dtype)
+    if return_state:
+        return out, final_state
+    return out
+
+
+def init_rwkv6_state(batch, cfg: RWKV6Cfg, dtype=jnp.float32):
+    return jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), dtype)
+
+
+def rwkv6_step(params: Pytree, cfg: RWKV6Cfg, x: jnp.ndarray, state: jnp.ndarray):
+    """Single-token step. x: (B, 1, D); state: (B, H, Dh, Dh)."""
+    r, k, v, g, w = _rkvwg(params, cfg, x)
+    r, k, v, w = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+    u = params["bonus_u"].astype(jnp.float32)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    sf = state.astype(jnp.float32)
+    out = jnp.einsum("bhd,bhde->bhe", r, sf + jnp.exp(u)[None, :, :, None] * kv)
+    new_state = jnp.exp(w)[..., None] * sf + kv
+    y = out.reshape(x.shape[0], 1, -1).astype(x.dtype)
+    return (y * g) @ params["w_out"], new_state.astype(state.dtype)

@@ -1,0 +1,604 @@
+"""Unified transformer assembly: dense / MoE / SSM / hybrid / enc-dec / VLM.
+
+Layer parameters are STACKED along a leading `n_layers` axis and the forward
+pass runs `jax.lax.scan` over them — one layer's HLO regardless of depth,
+which keeps 512-way SPMD lowering tractable (DESIGN.md §5). `cfg.remat`
+wraps the scanned body in `jax.checkpoint`.
+
+Model families and their per-layer structure:
+  dense   : {ln1, attn, ln2, mlp}
+  moe     : {ln1, attn, ln2, moe}
+  ssm     : {ln1, rwkv6 time-mix, ln2, mlp}          (rwkv6-1.6b, attn-free)
+  hybrid  : {ln1, attn ∥ ssm (parallel heads, mean-fused), ln2, mlp}  (hymba)
+  enc_dec : encoder {ln1, bidir attn, ln2, mlp} + decoder {ln1, causal attn,
+            lnx, cross-attn, ln2, mlp}               (whisper backbone)
+  vlm     : groups of (cross_attn_every - 1) self layers + 1 cross-attn
+            layer to image patch embeddings          (llama-3.2-vision)
+
+Modality frontends are STUBS per the brief: `input_specs` supplies
+precomputed frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | enc_dec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    act: str = "swiglu"
+    qkv_bias: bool = False
+    rope_theta: float = 500_000.0
+    norm: str = "rmsnorm"
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1024
+    # ssm / hybrid
+    d_state: int = 16
+    rwkv_heads: int = 0
+    # vlm
+    cross_attn_every: int = 0
+    n_modal_tokens: int = 0
+    # enc_dec
+    n_enc_layers: int = 0
+    enc_seq: int = 0
+    # decode / long context
+    sliding_window: int | None = None
+    dtype: Any = jnp.float32
+    remat: bool = False
+    # perf knobs (§Perf hillclimb)
+    attn_impl: str = "naive"     # 'naive' | 'chunked' (online-softmax blocks)
+    attn_chunk: int = 512
+    loss_vocab_chunk: int = 0    # 0 = full-logits CE; else vocab chunk size
+    scan_unroll: bool = False    # True: unroll layer scans (dry-run only —
+                                 # XLA cost analysis counts while bodies once)
+    source: str = ""             # citation for the config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_cfg(self, *, causal=True, window=None) -> L.AttnCfg:
+        return L.AttnCfg(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.hd,
+            qkv_bias=self.qkv_bias,
+            rope=True,
+            rope_theta=self.rope_theta,
+            causal=causal,
+            sliding_window=window,
+        )
+
+    def moe_cfg(self) -> M.MoECfg:
+        return M.MoECfg(
+            d_model=self.d_model, d_ff=self.d_ff,
+            n_experts=self.n_experts, top_k=self.top_k, act=self.act,
+            capacity_factor=self.capacity_factor,
+            group_size=self.moe_group_size,
+        )
+
+    def ssm_cfg(self) -> S.SSMCfg:
+        return S.SSMCfg(d_model=self.d_model, d_state=self.d_state)
+
+    def rwkv_cfg(self) -> S.RWKV6Cfg:
+        return S.RWKV6Cfg(d_model=self.d_model,
+                          n_heads=self.rwkv_heads or self.n_heads or 16)
+
+
+def _norm_init(cfg):
+    return L.init_rmsnorm if cfg.norm == "rmsnorm" else L.init_layernorm
+
+
+def _norm(cfg):
+    return L.rmsnorm if cfg.norm == "rmsnorm" else L.layernorm
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: ModelCfg) -> Pytree:
+    """One decoder layer (unstacked)."""
+    ks = jax.random.split(key, 4)
+    ninit = _norm_init(cfg)
+    p = {"ln1": ninit(cfg.d_model, cfg.dtype)}
+    if cfg.family == "ssm":
+        p["mix"] = S.init_rwkv6(ks[0], cfg.rwkv_cfg(), cfg.dtype)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg.attn_cfg(), cfg.dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = S.init_ssm(ks[3], cfg.ssm_cfg(), cfg.dtype)
+    p["ln2"] = ninit(cfg.d_model, cfg.dtype)
+    if cfg.family == "moe":
+        p["moe"] = M.init_moe(ks[1], cfg.moe_cfg(), cfg.dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype)
+    return p
+
+
+def _init_cross_block(key, cfg: ModelCfg) -> Pytree:
+    ks = jax.random.split(key, 2)
+    ninit = _norm_init(cfg)
+    return {
+        "lnx": ninit(cfg.d_model, cfg.dtype),
+        "xattn": L.init_attention(ks[0], cfg.attn_cfg(causal=False), cfg.dtype),
+        "ln2": ninit(cfg.d_model, cfg.dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype),
+        "gate": jnp.zeros((1,), cfg.dtype),  # tanh-gated cross-attn (llama-vision)
+    }
+
+
+def _stack(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(key, cfg: ModelCfg) -> Pytree:
+    """Initialize the full model pytree (layer leaves stacked: (NL, ...))."""
+    k_emb, k_layers, k_out, k_enc, k_x = jax.random.split(key, 5)
+    p: dict = {
+        "embed": L.init_embedding(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": _norm_init(cfg)(cfg.d_model, cfg.dtype),
+    }
+    if cfg.family == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        n_self_per = cfg.cross_attn_every - 1
+        p["layers"] = _stack(
+            k_layers, n_groups,
+            lambda k: _stack(k, n_self_per, lambda kk: _init_block(kk, cfg)),
+        )
+        p["cross_layers"] = _stack(
+            k_x, n_groups, lambda k: _init_cross_block(k, cfg)
+        )
+    elif cfg.family == "enc_dec":
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        p["enc_layers"] = _stack(
+            k_enc, cfg.n_enc_layers, lambda k: _init_block(k, enc_cfg)
+        )
+        p["enc_norm"] = _norm_init(cfg)(cfg.d_model, cfg.dtype)
+
+        def dec_block(k):
+            blk = _init_block(k, dataclasses.replace(cfg, family="dense"))
+            blk.update(_init_cross_block(jax.random.fold_in(k, 1), cfg))
+            return blk
+
+        p["layers"] = _stack(k_layers, cfg.n_layers, dec_block)
+    else:
+        p["layers"] = _stack(k_layers, cfg.n_layers, lambda k: _init_block(k, cfg))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks (apply)
+# ---------------------------------------------------------------------------
+def _block(cfg: ModelCfg, lp: Pytree, x, *, window=None, causal=True,
+           skip_mlp: bool = False):
+    """One decoder layer; returns (x, aux). skip_mlp: mixer sublayer only
+    (enc-dec decoder layers run self-attn -> cross-attn -> mlp)."""
+    norm = _norm(cfg)
+    h = norm(lp["ln1"], x)
+    aux = jnp.zeros((), jnp.float32)
+    attn_kw = dict(impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                   unroll=cfg.scan_unroll)
+    if cfg.family == "ssm":
+        mix = S.rwkv6_seq(lp["mix"], cfg.rwkv_cfg(), h, unroll=cfg.scan_unroll)
+    elif cfg.family == "hybrid":
+        a = L.attention(lp["attn"], cfg.attn_cfg(window=window, causal=causal),
+                        h, **attn_kw)
+        s_ = S.ssm_seq(lp["ssm"], cfg.ssm_cfg(), h)
+        mix = 0.5 * (a + s_)
+    else:
+        mix = L.attention(lp["attn"], cfg.attn_cfg(window=window, causal=causal),
+                          h, **attn_kw)
+    x = x + mix
+    if skip_mlp:
+        return x, aux
+    h = norm(lp["ln2"], x)
+    if cfg.family == "moe":
+        y, aux = M.moe_layer(lp["moe"], cfg.moe_cfg(), h)
+    else:
+        y = L.mlp(lp["mlp"], h, cfg.act)
+    return x + y, aux
+
+
+def _cross_block(cfg: ModelCfg, lp: Pytree, x, kv_src):
+    norm = _norm(cfg)
+    h = norm(lp["lnx"], x)
+    xa = L.cross_attention(lp["xattn"], cfg.attn_cfg(causal=False), h, kv_src)
+    x = x + jnp.tanh(lp["gate"]) * xa
+    h = norm(lp["ln2"], x)
+    return x + L.mlp(lp["mlp"], h, cfg.act)
+
+
+def _unroll(cfg: ModelCfg, xs) -> int | bool:
+    return True if cfg.scan_unroll else 1
+
+
+def _scan_layers(cfg: ModelCfg, stacked: Pytree, x, body):
+    """scan over stacked layer params; body(x, lp) -> (x, aux)."""
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(f)
+
+    def step(carry, lp):
+        y, aux = f(carry, lp)
+        return y, aux
+
+    x, auxs = jax.lax.scan(step, x, stacked, unroll=_unroll(cfg, stacked))
+    return x, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+def forward(params: Pytree, cfg: ModelCfg, tokens: jnp.ndarray,
+            *, modal_embeds: jnp.ndarray | None = None,
+            window: int | None = None,
+            return_hidden: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) int32 -> (logits (B, S, V), aux_loss).
+
+    return_hidden: skip the unembedding and return the final normed hidden
+    states (B, S, D) instead of logits (chunked-loss path, §Perf).
+    modal_embeds: (B, T, D) precomputed patch/frame embeddings (vlm/enc_dec).
+    """
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    if cfg.family == "dense" and cfg.name.startswith("gemma"):
+        x = x * np.sqrt(cfg.d_model)  # gemma convention
+
+    if cfg.family == "vlm":
+        assert modal_embeds is not None
+        def group(x, lps):
+            self_lp, cross_lp = lps
+            x, aux = _scan_layers(
+                cfg, self_lp, x, lambda y, lp: _block(cfg, lp, y, window=window)
+            )
+            x = _cross_block(cfg, cross_lp, x, modal_embeds)
+            return x, aux
+        x, aux = _scan_layers(
+            dataclasses.replace(cfg, remat=False),
+            (params["layers"], params["cross_layers"]), x,
+            group,
+        )
+    elif cfg.family == "enc_dec":
+        assert modal_embeds is not None
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        enc = modal_embeds.astype(cfg.dtype)
+        enc, _ = _scan_layers(
+            cfg, params["enc_layers"], enc,
+            lambda y, lp: _block(enc_cfg, lp, y, causal=False),
+        )
+        enc = _norm(cfg)(params["enc_norm"], enc)
+
+        def dec_layer(y, lp):
+            y, aux = _block(dataclasses.replace(cfg, family="dense"), lp, y,
+                            window=window, skip_mlp=True)
+            y = _cross_block(cfg, lp, y, enc)
+            return y, aux
+
+        x, aux = _scan_layers(cfg, params["layers"], x, dec_layer)
+    else:
+        x, aux = _scan_layers(
+            cfg, params["layers"], x, lambda y, lp: _block(cfg, lp, y, window=window)
+        )
+
+    x = _norm(cfg)(params["final_norm"], x)
+    if return_hidden:
+        return x, aux
+    logits = L.unembed(params["embed"], x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that BUILDS the decode cache and returns
+# last-token logits only (never materializes (B, S, V) logits).
+# ---------------------------------------------------------------------------
+def prefill(params: Pytree, cfg: ModelCfg, tokens: jnp.ndarray,
+            *, modal_embeds: jnp.ndarray | None = None,
+            window: int | None = None) -> tuple[jnp.ndarray, Pytree]:
+    """tokens: (B, S) -> (last_logits (B, V), cache ready for serve_step)."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    acfg = cfg.attn_cfg(window=window)
+    norm = _norm(cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def self_attn_kv(lp, h):
+        q, k, v = L._qkv(lp["attn"], acfg, h, positions)
+        if cfg.attn_impl == "chunked":
+            out = L._sdpa_chunked(
+                q, k, v, scale=1.0 / np.sqrt(acfg.head_dim), causal=True,
+                window=window, chunk=cfg.attn_chunk, unroll=cfg.scan_unroll,
+            )
+        else:
+            idx = jnp.arange(s)
+            mask = idx[:, None] >= idx[None, :]
+            if window is not None:
+                mask &= idx[:, None] - idx[None, :] < window
+            out = L._sdpa(q, k, v, jnp.broadcast_to(mask[None], (b, s, s)),
+                          scale=1.0 / np.sqrt(acfg.head_dim))
+        out = out.reshape(b, s, -1) @ lp["attn"]["wo"]
+        return out, k, v
+
+    def xattn_kv(lp, src):
+        t = src.shape[1]
+        k = (src @ lp["xattn"]["wk"]).reshape(b, t, acfg.n_kv_heads, acfg.head_dim)
+        v = (src @ lp["xattn"]["wv"]).reshape(b, t, acfg.n_kv_heads, acfg.head_dim)
+        return k, v
+
+    new_cache: dict = {}
+    if cfg.family == "ssm":
+        def body(x, lp):
+            h = norm(lp["ln1"], x)
+            mix, st = S.rwkv6_seq(lp["mix"], cfg.rwkv_cfg(), h, return_state=True,
+                                  unroll=cfg.scan_unroll)
+            x = x + mix
+            x = x + L.mlp(lp["mlp"], norm(lp["ln2"], x), cfg.act)
+            return x, st
+
+        x, states = jax.lax.scan(body, x, params["layers"], unroll=_unroll(cfg, None))
+        new_cache["rwkv_state"] = states.astype(cfg.dtype)
+    elif cfg.family == "hybrid":
+        def body(x, lp):
+            h = norm(lp["ln1"], x)
+            a, k, v = self_attn_kv(lp, h)
+            s_, st = S.ssm_seq(lp["ssm"], cfg.ssm_cfg(), h, return_state=True)
+            x = x + 0.5 * (a + s_)
+            x = x + L.mlp(lp["mlp"], norm(lp["ln2"], x), cfg.act)
+            return x, (k, v, st)
+
+        x, (k, v, st) = jax.lax.scan(body, x, params["layers"], unroll=_unroll(cfg, None))
+        new_cache.update(k=k.astype(cfg.dtype), v=v.astype(cfg.dtype),
+                         ssm_state=st.astype(cfg.dtype))
+    elif cfg.family == "vlm":
+        assert modal_embeds is not None
+        modal = modal_embeds.astype(cfg.dtype)
+
+        def group(x, lps):
+            self_lp, cross_lp = lps
+
+            def sbody(x, lp):
+                h = norm(lp["ln1"], x)
+                a, k, v = self_attn_kv(lp, h)
+                x = x + a
+                x = x + L.mlp(lp["mlp"], norm(lp["ln2"], x), cfg.act)
+                return x, (k, v)
+
+            x, (k, v) = jax.lax.scan(sbody, x, self_lp, unroll=_unroll(cfg, None))
+            x = _cross_block(cfg, cross_lp, x, modal)
+            xk, xv = xattn_kv(cross_lp, modal)
+            return x, (k, v, xk, xv)
+
+        x, (k, v, xk, xv) = jax.lax.scan(
+            group, x, (params["layers"], params["cross_layers"]),
+            unroll=_unroll(cfg, None),
+        )
+        new_cache.update(k=k.astype(cfg.dtype), v=v.astype(cfg.dtype),
+                         xk=xk.astype(cfg.dtype), xv=xv.astype(cfg.dtype))
+    elif cfg.family == "enc_dec":
+        assert modal_embeds is not None
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        enc = modal_embeds.astype(cfg.dtype)
+        enc, _ = _scan_layers(
+            cfg, params["enc_layers"], enc,
+            lambda y, lp: _block(enc_cfg, lp, y, causal=False),
+        )
+        enc = norm(params["enc_norm"], enc)
+
+        def body(x, lp):
+            h = norm(lp["ln1"], x)
+            a, k, v = self_attn_kv(lp, h)
+            x = x + a
+            h = norm(lp["lnx"], x)
+            xa = L.cross_attention(lp["xattn"], cfg.attn_cfg(causal=False), h, enc)
+            x = x + jnp.tanh(lp["gate"]) * xa
+            x = x + L.mlp(lp["mlp"], norm(lp["ln2"], x), cfg.act)
+            xk, xv = xattn_kv(lp, enc)
+            return x, (k, v, xk, xv)
+
+        x, (k, v, xk, xv) = jax.lax.scan(body, x, params["layers"], unroll=_unroll(cfg, None))
+        new_cache.update(k=k.astype(cfg.dtype), v=v.astype(cfg.dtype),
+                         xk=xk.astype(cfg.dtype), xv=xv.astype(cfg.dtype))
+    else:  # dense / moe
+        def body(x, lp):
+            h = norm(lp["ln1"], x)
+            a, k, v = self_attn_kv(lp, h)
+            x = x + a
+            h = norm(lp["ln2"], x)
+            if cfg.family == "moe":
+                y, _ = M.moe_layer(lp["moe"], cfg.moe_cfg(), h)
+            else:
+                y = L.mlp(lp["mlp"], h, cfg.act)
+            return x + y, (k, v)
+
+        x, (k, v) = jax.lax.scan(body, x, params["layers"], unroll=_unroll(cfg, None))
+        new_cache.update(k=k.astype(cfg.dtype), v=v.astype(cfg.dtype))
+
+    last = norm(params["final_norm"], x[:, -1])
+    logits = L.unembed(params["embed"], last)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step): one token against a KV cache / recurrent state
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelCfg, batch: int, max_len: int,
+               *, window: int | None = None) -> Pytree:
+    """Decode cache. Attention layers: (NL, B, T, KV, Dh) k/v tensors; SSM
+    layers: recurrent states. The cache length is min(max_len, window)."""
+    t = max_len if window is None else min(max_len, window)
+    acfg = cfg.attn_cfg()
+    nl = cfg.n_layers
+    c: dict = {}
+    if cfg.family == "ssm":
+        c["rwkv_state"] = jnp.zeros(
+            (nl, batch, cfg.rwkv_cfg().n_heads, cfg.rwkv_cfg().head_dim,
+             cfg.rwkv_cfg().head_dim), cfg.dtype)
+    elif cfg.family == "hybrid":
+        c["k"] = jnp.zeros((nl, batch, t, acfg.n_kv_heads, acfg.head_dim), cfg.dtype)
+        c["v"] = jnp.zeros_like(c["k"])
+        c["ssm_state"] = jnp.zeros(
+            (nl, batch, cfg.ssm_cfg().d_inner, cfg.d_state), cfg.dtype)
+    elif cfg.family == "vlm":
+        ng = cfg.n_layers // cfg.cross_attn_every
+        ns = cfg.cross_attn_every - 1
+        c["k"] = jnp.zeros((ng, ns, batch, t, acfg.n_kv_heads, acfg.head_dim),
+                           cfg.dtype)
+        c["v"] = jnp.zeros_like(c["k"])
+        # cross-attn K/V computed once from image embeddings at prefill
+        c["xk"] = jnp.zeros((ng, batch, cfg.n_modal_tokens, acfg.n_kv_heads,
+                             acfg.head_dim), cfg.dtype)
+        c["xv"] = jnp.zeros_like(c["xk"])
+    elif cfg.family == "enc_dec":
+        c["k"] = jnp.zeros((nl, batch, t, acfg.n_kv_heads, acfg.head_dim), cfg.dtype)
+        c["v"] = jnp.zeros_like(c["k"])
+        c["xk"] = jnp.zeros((nl, batch, cfg.enc_seq, acfg.n_kv_heads, acfg.head_dim),
+                            cfg.dtype)
+        c["xv"] = jnp.zeros_like(c["xk"])
+    else:
+        c["k"] = jnp.zeros((nl, batch, t, acfg.n_kv_heads, acfg.head_dim), cfg.dtype)
+        c["v"] = jnp.zeros_like(c["k"])
+    return c
+
+
+def _decode_xattn(cfg, lp, x, xk, xv):
+    """Cross-attention against precomputed cross K/V."""
+    b = x.shape[0]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ lp["xattn"]["wq"]).reshape(b, 1, h, dh)
+    out = L._sdpa(q, xk, xv, None, scale=1.0 / np.sqrt(dh))
+    return out.reshape(b, 1, -1) @ lp["xattn"]["wo"]
+
+
+def serve_step(params: Pytree, cfg: ModelCfg, cache: Pytree,
+               token: jnp.ndarray, pos: jnp.ndarray,
+               *, window: int | None = None,
+               abs_pos: jnp.ndarray | None = None,
+               full_cache: bool = False) -> tuple[jnp.ndarray, Pytree]:
+    """One decode step. token: (B, 1) int32; pos: scalar int32 — cache WRITE
+    position (with a wrapped sliding-window cache: abs_pos % window).
+    abs_pos: absolute sequence position for RoPE (defaults to pos).
+    full_cache: wrapped-window steady state — every cache slot valid.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = L.embed(params["embed"], token).astype(cfg.dtype)
+    acfg = cfg.attn_cfg(window=window)
+    norm = _norm(cfg)
+
+    def attn_step(lp, h, kc, vc):
+        out, new = L.decode_attention(
+            lp["attn"], acfg, h, {"k": kc, "v": vc}, pos,
+            rope_pos=abs_pos, full_cache=full_cache,
+        )
+        return out, new["k"], new["v"]
+
+    if cfg.family == "ssm":
+        def body(x, xs):
+            lp, st = xs
+            h = norm(lp["ln1"], x)
+            mix, st = S.rwkv6_step(lp["mix"], cfg.rwkv_cfg(), h, st)
+            x = x + mix
+            x = x + L.mlp(lp["mlp"], norm(lp["ln2"], x), cfg.act)
+            return x, st
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], cache["rwkv_state"]), unroll=_unroll(cfg, None))
+        new_cache = {"rwkv_state": new_state}
+    elif cfg.family == "hybrid":
+        def body(x, xs):
+            lp, kc, vc, st = xs
+            h = norm(lp["ln1"], x)
+            a, kc, vc = attn_step(lp, h, kc, vc)
+            s_, st = S.ssm_step(lp["ssm"], cfg.ssm_cfg(), h, st)
+            x = x + 0.5 * (a + s_)
+            x = x + L.mlp(lp["mlp"], norm(lp["ln2"], x), cfg.act)
+            return x, (kc, vc, st)
+
+        x, (k, v, st) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"], cache["ssm_state"]),
+            unroll=_unroll(cfg, None),
+        )
+        new_cache = {"k": k, "v": v, "ssm_state": st}
+    elif cfg.family == "vlm":
+        def group(x, xs):
+            self_lp, cross_lp, kc, vc, xk, xv = xs
+
+            def self_body(x, ys):
+                lp, kcl, vcl = ys
+                h = norm(lp["ln1"], x)
+                a, kcl, vcl = attn_step(lp, h, kcl, vcl)
+                x = x + a
+                x = x + L.mlp(lp["mlp"], norm(lp["ln2"], x), cfg.act)
+                return x, (kcl, vcl)
+
+            x, (kc, vc) = jax.lax.scan(self_body, x, (self_lp, kc, vc), unroll=_unroll(cfg, None))
+            h = norm(cross_lp["lnx"], x)
+            xa = _decode_xattn(cfg, cross_lp, h, xk, xv)
+            x = x + jnp.tanh(cross_lp["gate"]) * xa
+            x = x + L.mlp(cross_lp["mlp"], norm(cross_lp["ln2"], x), cfg.act)
+            return x, (kc, vc)
+
+        x, (k, v) = jax.lax.scan(
+            group, x,
+            (params["layers"], params["cross_layers"], cache["k"], cache["v"],
+             cache["xk"], cache["xv"]),
+            unroll=_unroll(cfg, None),
+        )
+        new_cache = dict(cache, k=k, v=v)
+    elif cfg.family == "enc_dec":
+        def body(x, xs):
+            lp, kc, vc, xk, xv = xs
+            h = norm(lp["ln1"], x)
+            a, kc, vc = attn_step(lp, h, kc, vc)
+            x = x + a
+            h = norm(lp["lnx"], x)
+            xa = _decode_xattn(cfg, lp, h, xk, xv)
+            x = x + jnp.tanh(lp["gate"]) * xa
+            x = x + L.mlp(lp["mlp"], norm(lp["ln2"], x), cfg.act)
+            return x, (kc, vc)
+
+        x, (k, v) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]),
+            unroll=_unroll(cfg, None),
+        )
+        new_cache = dict(cache, k=k, v=v)
+    else:  # dense / moe
+        def body(x, xs):
+            lp, kc, vc = xs
+            h = norm(lp["ln1"], x)
+            a, kc, vc = attn_step(lp, h, kc, vc)
+            x = x + a
+            h = norm(lp["ln2"], x)
+            if cfg.family == "moe":
+                y, _ = M.moe_layer(lp["moe"], cfg.moe_cfg(), h)
+            else:
+                y = L.mlp(lp["mlp"], h, cfg.act)
+            return x + y, (kc, vc)
+
+        x, (k, v) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]), unroll=_unroll(cfg, None))
+        new_cache = {"k": k, "v": v}
+
+    x = norm(params["final_norm"], x)
+    logits = L.unembed(params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,90 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Each optimizer is an (init, update) pair over arbitrary pytrees:
+  opt_state = init(params)
+  new_params, new_opt_state = update(params, grads, opt_state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(params, grads, state):
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new_params, {"step": state["step"] + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+        return new_params, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_ = b1 * m + (1 - b1) * g32
+            v_ = b2 * v + (1 - b2) * g32 * g32
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_, v_
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, {"step": step, "m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def get(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(name)

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Tests run single-device (the 512-device override lives ONLY in dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,110 @@
+"""Aggregation mechanisms (eq. 6/7) + bias matrix (eq. 10/17) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import aggregation, convergence, errors, routing, topology
+
+
+def _setup(seed, n=6, l=5, k=8, rho_val=0.7):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    w = jax.random.normal(ks[0], (n, l, k))
+    p = jax.nn.softmax(jax.random.normal(ks[1], (n,)))
+    rho = jnp.full((n, n), rho_val)
+    e = errors.sample_success(ks[2], rho, l)
+    return w, p, e
+
+
+@given(st.integers(0, 1000), st.floats(0.1, 0.99))
+@settings(max_examples=25, deadline=None)
+def test_coefficients_normalize(seed, rho_val):
+    """sum_m p_{m,n,l} == 1 for every receiver/segment (paper eq. 6)."""
+    _, p, e = _setup(seed, rho_val=rho_val)
+    coeff = aggregation.aggregation_coefficients(p, e)
+    np.testing.assert_allclose(np.asarray(coeff.sum(axis=0)), 1.0, atol=1e-5)
+
+
+def test_all_mechanisms_equal_ideal_when_error_free():
+    w, p, e = _setup(0)
+    e1 = jnp.ones_like(e)
+    ideal = aggregation.ideal(w, p)
+    for name in ("ra_normalized", "substitution"):
+        out = aggregation.AGGREGATORS[name](w, p, e1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ideal), atol=1e-5)
+
+
+def test_own_model_always_kept():
+    """e[n,n,l]=1: with everything else lost, client keeps its own model."""
+    w, p, _ = _setup(1)
+    n, l, _ = w.shape
+    e = jnp.broadcast_to(jnp.eye(n)[:, :, None], (n, n, l))
+    out = aggregation.ra_normalized(w, p, e)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w), atol=1e-5)
+
+
+def test_substitution_biases_toward_own_model():
+    """A disconnected client's aggregate is dominated by its own model under
+    substitution (the paper's explanation for model inconsistency)."""
+    w, p, _ = _setup(2)
+    n, l, _ = w.shape
+    e = jnp.ones((n, n, l)).at[:, 0, :].set(0.0)  # client 0 receives nothing
+    e = jnp.maximum(e, jnp.eye(n)[:, :, None])
+    sub = aggregation.substitution(w, p, e)
+    # client 0 under substitution keeps (1 - p_0)-weighted own model + own:
+    np.testing.assert_allclose(np.asarray(sub[0]), np.asarray(w[0]), atol=1e-5)
+    ra = aggregation.ra_normalized(w, p, e)
+    np.testing.assert_allclose(np.asarray(ra[0]), np.asarray(w[0]), atol=1e-5)
+
+
+def test_convexity_of_ra_aggregate():
+    """R&A output is a convex combination: within [min, max] of inputs."""
+    w, p, e = _setup(3)
+    out = np.asarray(aggregation.ra_normalized(w, p, e))
+    lo = np.asarray(w.min(axis=0))
+    hi = np.asarray(w.max(axis=0))
+    assert (out >= lo - 1e-5).all() and (out <= hi + 1e-5).all()
+
+
+def test_bias_matrix_rowsum_zero_error_free():
+    """Lambda entries are p_m - p_{m,n,l}: zero when nothing is lost."""
+    _, p, e = _setup(4)
+    lam = aggregation.bias_matrix(p, jnp.ones_like(e))
+    np.testing.assert_allclose(np.asarray(lam), 0.0, atol=1e-6)
+
+
+def test_eq17_bound_dominates_monte_carlo():
+    """E||Lambda||_F^2 <= sum (1-rho)(p^2+p)  (eq. 17), Monte-Carlo check."""
+    key = jax.random.PRNGKey(0)
+    n, l = 6, 4
+    p = jax.nn.softmax(jax.random.normal(key, (n,)))
+    rho = jnp.full((n, n), 0.8).at[jnp.arange(n), jnp.arange(n)].set(1.0)
+    trials = []
+    for i in range(300):
+        e = errors.sample_success(jax.random.fold_in(key, i), rho, l)
+        trials.append(np.asarray(aggregation.bias_sq_norm(p, e)).mean())
+    mc = float(np.mean(trials))
+    bound = float(convergence.lambda_bound(p, rho))
+    assert mc <= bound * 1.05, (mc, bound)
+
+
+def test_bias_decreases_with_rho():
+    """Mean ||Lambda||^2 decreases as channels improve (Fig. 8 trend)."""
+    key = jax.random.PRNGKey(1)
+    n, l = 6, 4
+    p = jnp.ones((n,)) / n
+    means = []
+    for rv in (0.5, 0.8, 0.95, 1.0):
+        rho = jnp.full((n, n), rv)
+        vals = [
+            np.asarray(
+                aggregation.bias_sq_norm(
+                    p, errors.sample_success(jax.random.fold_in(key, i), rho, l)
+                )
+            ).mean()
+            for i in range(100)
+        ]
+        means.append(np.mean(vals))
+    assert means[0] > means[1] > means[2] > means[3] == 0.0

@@ -1,0 +1,48 @@
+"""Segmentation codec + error sampling properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import errors
+
+
+@given(
+    st.integers(1, 6),          # n clients
+    st.integers(1, 40),         # leaf size a
+    st.integers(1, 17),         # leaf size b
+    st.integers(1, 13),         # seg len
+)
+@settings(max_examples=30, deadline=None)
+def test_codec_roundtrip(n, a, b, seg_len):
+    key = jax.random.PRNGKey(a * 131 + b)
+    tree = {
+        "w": jax.random.normal(key, (n, a, b)),
+        "b": jax.random.normal(key, (n, b)),
+        "nested": {"u": jax.random.normal(key, (n, a))},
+    }
+    mat, spec = errors.stack_to_matrix(tree)
+    seg = errors.segment(mat, seg_len)
+    back = errors.matrix_to_stack(errors.unsegment(seg, mat.shape[1]), spec)
+    for k in jax.tree_util.tree_leaves(tree):
+        pass
+    flat_a = jax.tree_util.tree_leaves(tree)
+    flat_b = jax.tree_util.tree_leaves(back)
+    for x, y in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sample_success_statistics():
+    key = jax.random.PRNGKey(0)
+    n, l = 5, 4000
+    rho = jnp.full((n, n), 0.73)
+    e = errors.sample_success(key, rho, l)
+    off = np.asarray(e)[~np.eye(n, dtype=bool)]
+    assert abs(off.mean() - 0.73) < 0.01
+    diag = np.asarray(e)[np.eye(n, dtype=bool)]
+    np.testing.assert_array_equal(diag, 1.0)
+
+
+def test_packet_len_bits():
+    assert errors.packet_len_bits(1024) == 32 * 1024  # float32 encoding

@@ -1,0 +1,76 @@
+"""Protocol rounds: R&A / AaYG / C-FL semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocols, routing, topology
+
+
+@pytest.fixture(scope="module")
+def setup():
+    net = topology.paper_network(packet_len_bits=200_000)
+    rho, _ = routing.e2e_success(net.link_eps)
+    key = jax.random.PRNGKey(0)
+    n = 10
+    params = {
+        "w": jax.random.normal(key, (n, 6, 8)),
+        "b": jax.random.normal(key, (n, 8)),
+    }
+    p = jax.nn.softmax(jax.random.normal(key, (n,)))
+    return net, rho, params, p
+
+
+def test_ra_round_preserves_structure(setup):
+    net, rho, params, p = setup
+    out, e = protocols.ra_round(params, p, rho, jax.random.PRNGKey(1), seg_len=8)
+    assert jax.tree.structure(out) == jax.tree.structure(params)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        assert a.shape == b.shape
+    assert e.shape[0] == e.shape[1] == 10
+
+
+def test_ra_round_perfect_channel_is_consensus(setup):
+    net, _, params, p = setup
+    rho = jnp.ones((10, 10))
+    out, _ = protocols.ra_round(params, p, rho, jax.random.PRNGKey(1), seg_len=8)
+    # all clients end with the identical global average
+    for leaf in jax.tree.leaves(out):
+        for i in range(1, 10):
+            np.testing.assert_allclose(
+                np.asarray(leaf[0]), np.asarray(leaf[i]), atol=1e-5
+            )
+
+
+def test_aayg_more_mixes_improves_consensus(setup):
+    net, _, params, p = setup
+    def spread(stacked):
+        tot = 0.0
+        for leaf in jax.tree.leaves(stacked):
+            tot += float(jnp.var(leaf, axis=0).sum())
+        return tot
+
+    outs = {}
+    for j in (1, 5):
+        outs[j] = protocols.aayg_round(
+            params, p, net.link_eps, jax.random.PRNGKey(2), seg_len=8, n_mixes=j
+        )
+    assert spread(outs[5]) < spread(outs[1])
+
+
+def test_cfl_round_error_free_matches_ideal(setup):
+    net, _, params, p = setup
+    rho = jnp.ones((10, 10))
+    out = protocols.cfl_round(params, p, rho, jax.random.PRNGKey(3), seg_len=8)
+    ideal = protocols.ideal_cfl_round(params, p, seg_len=8)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ideal)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_rounds_are_jittable_and_deterministic(setup):
+    net, rho, params, p = setup
+    k = jax.random.PRNGKey(4)
+    a1, _ = protocols.ra_round(params, p, rho, k, seg_len=8)
+    a2, _ = protocols.ra_round(params, p, rho, k, seg_len=8)
+    for x, y in zip(jax.tree.leaves(a1), jax.tree.leaves(a2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,110 @@
+"""Optimizers, checkpointing, data pipeline, smallnets."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.data import pipeline, synthetic
+from repro.models import smallnets
+from repro.optim import optimizers
+
+
+def _quad_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+    return params, loss, target
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.1), ("adamw", 0.3)])
+def test_optimizers_converge(name, lr):
+    params, loss, target = _quad_problem()
+    opt = optimizers.get(name, lr, **({"weight_decay": 0.0} if name == "adamw" else {}))
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(params, g, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_sgd_momentum():
+    params, loss, target = _quad_problem()
+    opt = optimizers.sgd(0.05, momentum=0.9)
+    state = opt.init(params)
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(params, g, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_checkpoint_roundtrip():
+    key = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(key, (4, 5)),
+            "b": {"c": jnp.arange(7), "d": jnp.float32(3.5)}}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, tree, step=42)
+        back = checkpoint.restore(d, jax.tree.map(jnp.zeros_like, tree))
+        assert checkpoint.latest_step(d) == 42
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.zeros((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, tree)
+        with pytest.raises(ValueError):
+            checkpoint.restore(d, {"a": jnp.zeros((3, 3))})
+
+
+def test_noniid_partition_is_label_skew():
+    data = synthetic.fed_image_classification(n_clients=10, classes_per_client=1)
+    for n in range(10):
+        assert len(np.unique(data.train_y[n])) == 1
+    assert len(np.unique(data.test_y)) == 10
+    w = data.weights()
+    np.testing.assert_allclose(w.sum(), 1.0)
+    assert w.std() > 0  # unequal client sizes by construction
+
+
+def test_char_stream_shapes():
+    data = synthetic.fed_char_stream(n_clients=4, seq_len=16, iid=False)
+    assert data.n_clients == 4
+    for x, y in zip(data.train_x, data.train_y):
+        assert x.shape == y.shape and x.shape[1] == 16
+        # y is x shifted by one
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+
+def test_batches_iterator():
+    x = np.arange(100).reshape(50, 2)
+    y = np.arange(50)
+    seen = 0
+    for bx, by in pipeline.batches(x, y, 8):
+        assert bx.shape == (8, 2)
+        seen += len(bx)
+    assert seen == 48  # drop_last
+
+
+def test_smallnets_forward_shapes():
+    key = jax.random.PRNGKey(0)
+    x_img = jax.random.normal(key, (3, 28, 28, 1))
+    cnn = smallnets.init_cnn(key)
+    assert smallnets.apply_cnn(cnn, x_img).shape == (3, 10)
+
+    x_c = jax.random.normal(key, (2, 32, 32, 3))
+    rn = smallnets.init_resnet(key, depth=18, width=8)
+    assert smallnets.apply_resnet(rn, x_c).shape == (2, 10)
+    rn56 = smallnets.init_resnet(key, depth=56, width=4)
+    assert smallnets.apply_resnet(rn56, x_c).shape == (2, 10)
+
+    toks = jax.random.randint(key, (2, 12), 0, 90)
+    rnn = smallnets.init_charrnn(key, hidden=32)
+    assert smallnets.apply_charrnn(rnn, toks).shape == (2, 12, 90)
