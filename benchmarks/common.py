@@ -1,4 +1,10 @@
-"""Shared benchmark utilities: timing + CSV emission + standard FL setup."""
+"""Shared benchmark utilities: timing + CSV emission + standard FL setup.
+
+Sweep benchmarks build a `ScenarioGrid` from the same standard setup and run
+the whole figure in ONE `scenarios.run_grid` dispatch (the batched scenario
+engine); `standard_fl` keeps the scalar one-scenario path for benchmarks that
+genuinely need a single run.
+"""
 from __future__ import annotations
 
 import time
@@ -7,7 +13,7 @@ import numpy as np
 
 from repro.core import topology
 from repro.data import synthetic
-from repro.fl import simulator
+from repro.fl import scenarios, simulator
 from repro.models import smallnets
 
 # Harsher channel than the paper default so error effects are visible at
@@ -30,35 +36,68 @@ def timed(fn, *args, repeats: int = 1, **kw):
     return out, dt * 1e6
 
 
+def standard_data(seed=0, samples_per_client=80):
+    """Paper Sec. V data at CPU scale: 10-client label-skew non-iid shards."""
+    return synthetic.fed_image_classification(
+        n_clients=10, samples_per_client=samples_per_client, seed=seed
+    )
+
+
+def standard_net(packet_len_bits=25_000, tx_power_dbm=None, edge_density=0.5,
+                 n_relays=0):
+    """Table-II network (optionally with Fig. 9 routing-only relays)."""
+    tx = tx_power_dbm if tx_power_dbm is not None else topology.TX_POWER_DBM
+    if n_relays > 0:
+        return topology.paper_network_with_relays(
+            n_relays, edge_density=edge_density,
+            packet_len_bits=packet_len_bits, tx_power_dbm=tx,
+        )
+    return topology.make_network(
+        topology.TABLE_II_COORDS, edge_density=edge_density,
+        packet_len_bits=packet_len_bits, n_clients=10, tx_power_dbm=tx,
+    )
+
+
+def standard_model(d_hidden=48):
+    init = lambda k: smallnets.init_mlp_clf(k, d_in=32, d_hidden=d_hidden)
+    return init, smallnets.apply_mlp_clf
+
+
+def standard_cfg(n_rounds=15, seg_len=256, aayg_mixes=1, seed=0, **kw):
+    return simulator.SimConfig(
+        n_rounds=n_rounds, local_epochs=3, seg_len=seg_len,
+        aayg_mixes=aayg_mixes, seed=seed, **kw,
+    )
+
+
+def run_standard_grid(grid: scenarios.ScenarioGrid, *, n_rounds=15,
+                      seg_len=256, aayg_mixes=1, data_seed=0,
+                      samples_per_client=80) -> scenarios.GridResult:
+    """One batched dispatch of `grid` on the standard data/model.
+
+    ``data_seed`` seeds the shared dataset only; model-init / channel seeds
+    are per-scenario and live in the grid (ScenarioGrid.product(seeds=...)).
+    """
+    data = standard_data(seed=data_seed, samples_per_client=samples_per_client)
+    init, apply_fn = standard_model()
+    cfg = standard_cfg(n_rounds=n_rounds, seg_len=seg_len,
+                       aayg_mixes=aayg_mixes)
+    return scenarios.run_grid(init, apply_fn, data, grid, cfg)
+
+
 def standard_fl(n_rounds=15, protocol="ra", mode="ra_normalized",
                 packet_len_bits=25_000, tx_power_dbm=None, seg_len=256,
                 edge_density=0.5, n_relays=0, aayg_mixes=1, seed=0,
                 samples_per_client=80):
     """Paper Sec. V setup at CPU scale: 10 clients, MLP on synthetic
-    label-skew non-iid data, Table-II network."""
-    data = synthetic.fed_image_classification(
-        n_clients=10, samples_per_client=samples_per_client, seed=seed
-    )
-    if n_relays > 0:
-        net = topology.paper_network_with_relays(
-            n_relays, edge_density=edge_density,
-            packet_len_bits=packet_len_bits,
-            tx_power_dbm=(tx_power_dbm if tx_power_dbm is not None
-                          else topology.TX_POWER_DBM),
-        )
-    else:
-        net = topology.make_network(
-            topology.TABLE_II_COORDS,
-            edge_density=edge_density,
-            packet_len_bits=packet_len_bits,
-            n_clients=10,
-            tx_power_dbm=(tx_power_dbm if tx_power_dbm is not None
-                          else topology.TX_POWER_DBM),
-        )
-    cfg = simulator.SimConfig(
-        protocol=protocol, mode=mode, n_rounds=n_rounds, local_epochs=3,
-        seg_len=seg_len, aayg_mixes=aayg_mixes, seed=seed,
-    )
-    init = lambda k: smallnets.init_mlp_clf(k, d_in=32, d_hidden=48)
-    res = simulator.run(init, smallnets.apply_mlp_clf, data, net, cfg)
+    label-skew non-iid data, Table-II network (scalar, one scenario)."""
+    data = standard_data(seed=seed, samples_per_client=samples_per_client)
+    net = standard_net(packet_len_bits=packet_len_bits,
+                       tx_power_dbm=tx_power_dbm, edge_density=edge_density,
+                       n_relays=n_relays)
+    cfg = standard_cfg(n_rounds=n_rounds, seg_len=seg_len,
+                       aayg_mixes=aayg_mixes, seed=seed,
+                       protocol=protocol, mode=mode)
+    init, apply_fn = standard_model()
+    res = simulator.run(init, apply_fn, data, net, cfg)
     return res, net, data

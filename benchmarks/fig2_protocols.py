@@ -3,26 +3,36 @@
 Validates: R&A+adaptive-norm > {R&A+substitution, AaYG, C-FL}; R&A clients
 are more consistent (smaller spread).  Harsh channel (reduced TX power)
 makes communication errors bite at CPU scale.
+
+All six (protocol, mechanism) rows run in ONE batched `run_grid` dispatch.
 """
+import time
+
 from benchmarks import common
+from repro.fl import scenarios
+
+
+ROWS = [
+    ("ra", "ra_normalized"),
+    ("ra", "substitution"),
+    ("aayg", "ra_normalized"),
+    ("aayg", "substitution"),
+    ("cfl", "ra_normalized"),
+    ("ideal_cfl", "ra_normalized"),
+]
 
 
 def main() -> None:
-    rows = [
-        ("ra", "ra_normalized"),
-        ("ra", "substitution"),
-        ("aayg", "ra_normalized"),
-        ("aayg", "substitution"),
-        ("cfl", "ra_normalized"),
-        ("ideal_cfl", "ra_normalized"),
-    ]
-    for proto, mode in rows:
-        (res, _, _), us = common.timed(
-            common.standard_fl, protocol=proto, mode=mode,
-            tx_power_dbm=common.HARSH_TX_DBM, packet_len_bits=100_000,
-        )
-        acc = res.mean_acc[-1]
-        spread = res.acc_per_client[-1].std()
+    net = common.standard_net(packet_len_bits=100_000,
+                              tx_power_dbm=common.HARSH_TX_DBM)
+    grid = scenarios.ScenarioGrid.product(networks=[("fig2", net)],
+                                          protocols=ROWS)
+    t0 = time.time()
+    res = common.run_standard_grid(grid)
+    us = (time.time() - t0) * 1e6 / len(grid)
+    for (proto, mode), i in zip(ROWS, range(len(grid))):
+        acc = res.mean_acc[i, -1]
+        spread = res.acc[i, -1].std()
         common.emit(
             f"fig2/{proto}+{mode}", us,
             f"final_acc={acc:.3f};client_spread={spread:.4f}",

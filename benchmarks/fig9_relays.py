@@ -2,22 +2,48 @@
 
 R&A exploits relays (better routes); AaYG cannot.  With enough relays R&A
 approaches ideal error-free C-FL.
+
+The relay axis changes the physical node count; the scenario engine pads
+every network to the largest V with isolated nodes (routing-neutral), so the
+whole figure — ideal reference included — is ONE batched `run_grid` call.
 """
+import time
+
 from benchmarks import common
+from repro.fl import scenarios
+
+
+RELAY_COUNTS = (0, 7, 14, 28)
+N_ROUNDS = 12
 
 
 def main() -> None:
-    (ideal, _, _), _ = common.timed(common.standard_fl, protocol="ideal_cfl")
-    common.emit("fig9/ideal_cfl", 0.0, f"final_acc={ideal.mean_acc[-1]:.3f}")
-    for n_relays in (0, 7, 14, 28):
-        (res, net, _), us = common.timed(
-            common.standard_fl, protocol="ra", n_relays=n_relays,
-            packet_len_bits=400_000, edge_density=0.15, n_rounds=12,
-            tx_power_dbm=common.HARSH_TX_DBM,
-        )
+    relay_nets = [
+        (f"relays{nr}",
+         common.standard_net(n_relays=nr, packet_len_bits=400_000,
+                             edge_density=0.15,
+                             tx_power_dbm=common.HARSH_TX_DBM))
+        for nr in RELAY_COUNTS
+    ]
+    grid = scenarios.ScenarioGrid.concat(
+        scenarios.ScenarioGrid.product(
+            networks=[("ideal", common.standard_net())],
+            protocols=[("ideal_cfl", "ra_normalized")],
+        ),
+        scenarios.ScenarioGrid.product(
+            networks=relay_nets, protocols=[("ra", "ra_normalized")],
+        ),
+    )
+    t0 = time.time()
+    res = common.run_standard_grid(grid, n_rounds=N_ROUNDS)
+    us = (time.time() - t0) * 1e6 / len(grid)
+    ideal = res.result("ideal/ideal_cfl+ra_normalized")
+    common.emit("fig9/ideal_cfl", us, f"final_acc={ideal.mean_acc[-1]:.3f}")
+    for label, net in relay_nets:
+        one = res.result(f"{label}/ra+ra_normalized")
         common.emit(
-            f"fig9/relays{n_relays}", us,
-            f"final_acc={res.mean_acc[-1]:.3f};nodes={net.n_nodes}",
+            f"fig9/{label}", us,
+            f"final_acc={one.mean_acc[-1]:.3f};nodes={net.n_nodes}",
         )
 
 

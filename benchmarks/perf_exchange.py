@@ -1,9 +1,15 @@
 """§Perf hillclimb #3 (paper's technique): collective schedule of the R&A
 exchange (core/dfl_step.ra_exchange) on a client mesh axis.
 
-Compares the routed-unicast analogue (all_to_all of destination-weighted
-segments) against the naive masked-psum schedule, by collective bytes in the
-lowered SPMD module.  Runs standalone (needs its own device count):
+Part 1 compares the routed-unicast analogue (all_to_all of
+destination-weighted segments) against the naive masked-psum schedule, by
+collective bytes in the lowered SPMD module.
+
+Part 2 measures the batched scenario engine on the exchange-heavy regime:
+a 16-point PER sweep dispatched once via `scenarios.run_grid` vs the same
+compiled scalar program dispatched per scenario (`run_sequential`).
+
+Runs standalone (needs its own device count):
 
   PYTHONPATH=src:. python benchmarks/perf_exchange.py
 """
@@ -12,6 +18,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +27,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
-def main() -> None:
+def collective_schedules() -> None:
     from repro.core import dfl_step
     from repro.launch.dryrun import collective_bytes
 
@@ -28,11 +35,6 @@ def main() -> None:
     mesh = jax.make_mesh((n,), ("clients",))
     m_params = 4_194_304          # 4M params (16 MB f32) per client
     seg_len = 1024
-
-    params = jnp.zeros((m_params,), jnp.float32)
-    p = jnp.ones((n,), jnp.float32) / n
-    rho = jnp.full((n, n), 0.9, jnp.float32)
-    key = jax.random.PRNGKey(0)
 
     print("name,us_per_call,derived")
     results = {}
@@ -70,6 +72,49 @@ def main() -> None:
     rs = results["reduce_scatter"] / max(results["all_to_all"], 1)
     print(f"perf_exchange/summary,0.0,psum_vs_a2a_ratio={ratio:.2f};"
           f"rs_vs_a2a_ratio={rs:.2f}")
+
+
+def grid_dispatch() -> None:
+    """Batched vs per-scenario dispatch of an exchange-dominated workload."""
+    from benchmarks import common
+    from repro.fl import scenarios, simulator
+
+    data = common.standard_data(samples_per_client=40)
+    init, apply_fn = common.standard_model(d_hidden=32)
+    # 16 TX-power points spanning broken -> clean channels: a pure link-PER
+    # axis (exchange-heavy: 2 local epochs, 10 rounds).
+    networks = [
+        (f"tx{tx:.1f}", common.standard_net(packet_len_bits=100_000,
+                                            tx_power_dbm=tx))
+        for tx in np.linspace(15.0, 20.0, 16)
+    ]
+    grid = scenarios.ScenarioGrid.product(networks=networks)
+    cfg = simulator.SimConfig(n_rounds=10, local_epochs=2, seg_len=256)
+    runner = scenarios.GridRunner(init, apply_fn, data, cfg)
+
+    t0 = time.time()
+    res = runner.run(grid)
+    t_cold = time.time() - t0
+    t0 = time.time()
+    runner.run(grid)
+    t_warm = time.time() - t0
+    t0 = time.time()
+    runner.run_sequential(grid)
+    t_seq = time.time() - t0
+    acc_lo, acc_hi = res.mean_acc[0, -1], res.mean_acc[-1, -1]
+    print(
+        f"perf_exchange/grid_dispatch,{t_warm * 1e6:.1f},"
+        f"scenarios={len(grid)};batched_cold_s={t_cold:.2f};"
+        f"batched_warm_s={t_warm:.2f};"
+        f"per_scenario_dispatch_s={t_seq:.2f};"
+        f"warm_speedup={t_seq / max(t_warm, 1e-9):.2f}x;"
+        f"acc_worst_channel={acc_lo:.3f};acc_best_channel={acc_hi:.3f}"
+    )
+
+
+def main() -> None:
+    collective_schedules()
+    grid_dispatch()
 
 
 if __name__ == "__main__":

@@ -75,6 +75,17 @@ AGGREGATORS = {
     "ideal": ideal,
 }
 
+# Traced-mode dispatch: mode ids are stable array values so a whole scenario
+# grid (ra_normalized and substitution points alike) compiles to ONE program.
+MODE_IDS = {"ra_normalized": 0, "substitution": 1}
+_MODE_BRANCHES = (ra_normalized, substitution)
+
+
+def apply_mode(mode_id: jnp.ndarray, w_seg: jnp.ndarray, p: jnp.ndarray,
+               e: jnp.ndarray) -> jnp.ndarray:
+    """Aggregate with a *traced* mechanism selector (see MODE_IDS)."""
+    return jax.lax.switch(mode_id, _MODE_BRANCHES, w_seg, p, e)
+
 
 def bias_matrix(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
     """Aggregation bias matrix Lambda_l with entries p_m - p_{m,n,l} (eq. 10).

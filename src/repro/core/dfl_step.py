@@ -59,7 +59,9 @@ def ra_exchange(
       seg_len: K values per segment.
       comm: 'all_to_all' (routed-unicast analogue) or 'psum'.
     """
-    n = jax.lax.axis_size(axis)
+    # p is replicated with one weight per client on the axis, so its static
+    # shape is the axis size (jax.lax.axis_size is unavailable on jax 0.4.x).
+    n = p.shape[0]
     me = jax.lax.axis_index(axis)
 
     flat, unravel = _flatten(params)

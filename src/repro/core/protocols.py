@@ -15,7 +15,17 @@ PRNG key, and return the new client-stacked pytree after local aggregation.
                      aggregator, lossy downlink broadcast back; erroneous
                      downlink segments are replaced by the receiver's own.
 
-Everything is jit-compatible; `seg_len`, `mode`, and `J` are static.
+Two layers:
+
+  * ``*_round_seg`` functions operate on segment tensors (N, L, K) with
+    TRACED protocol parameters (mode_id, aggregator) — the substrate of the
+    batched scenario engine (`repro.fl.scenarios`), where one compiled
+    program serves every grid point.  ``dispatch_round_seg`` selects the
+    protocol itself by a traced ``protocol_id`` (`PROTOCOL_IDS`).
+  * the original pytree-level wrappers (``ra_round`` et al.) keep the
+    static-string API for interactive use and tests.
+
+Everything is jit-compatible; `seg_len` and `n_mixes` are static.
 """
 from __future__ import annotations
 
@@ -29,6 +39,10 @@ from repro.core import aggregation, errors
 
 Pytree = Any
 
+# Traced protocol selector values (order = lax.switch branch order).
+PROTOCOL_IDS = {"ra": 0, "aayg": 1, "cfl": 2, "ideal_cfl": 3, "none": 4}
+MODE_IDS = aggregation.MODE_IDS
+
 
 def _to_segments(stacked: Pytree, seg_len: int):
     mat, spec = errors.stack_to_matrix(stacked)
@@ -40,6 +54,151 @@ def _from_segments(seg: jnp.ndarray, spec, m_params: int) -> Pytree:
     return errors.matrix_to_stack(errors.unsegment(seg, m_params), spec)
 
 
+# ---------------------------------------------------------------------------
+# Segment-level protocol rounds (traced mode / aggregator).
+# ---------------------------------------------------------------------------
+def ra_round_seg(
+    w_seg: jnp.ndarray,
+    p: jnp.ndarray,
+    rho: jnp.ndarray,
+    key: jax.Array,
+    mode_id: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """R&A local aggregation on segments; returns (out, e) with the sampled
+    (N, N, L) success mask exposed for bias/Λ diagnostics."""
+    n = w_seg.shape[0]
+    e = errors.sample_success(key, rho, w_seg.shape[1], n_clients=n)
+    return aggregation.apply_mode(mode_id, w_seg, p, e), e
+
+
+def aayg_round_seg(
+    w_seg: jnp.ndarray,
+    p: jnp.ndarray,
+    link_eps: jnp.ndarray,
+    key: jax.Array,
+    mode_id: jnp.ndarray,
+    *,
+    n_mixes: int = 1,
+) -> jnp.ndarray:
+    """Aggregate-as-You-Go gossip: J = n_mixes one-hop mix iterations.
+
+    ``link_eps`` is the (V, V) one-hop packet success matrix (0 where not
+    adjacent); only the leading N-client block participates (AaYG cannot
+    exploit routing-only relay nodes — Fig. 9 note).
+    """
+    n, l, _ = w_seg.shape
+    eps = link_eps[:n, :n]
+
+    def mix(w, key):
+        u = jax.random.uniform(key, (n, n, l))
+        e = (u < eps[:, :, None]).astype(jnp.float32)
+        e = jnp.maximum(e, jnp.eye(n)[:, :, None])  # own model always present
+        return aggregation.apply_mode(mode_id, w, p, e)
+
+    keys = jax.random.split(key, n_mixes)
+    return jax.lax.fori_loop(0, n_mixes, lambda j, w: mix(w, keys[j]), w_seg)
+
+
+def cfl_round_seg(
+    w_seg: jnp.ndarray,
+    p: jnp.ndarray,
+    rho: jnp.ndarray,
+    key: jax.Array,
+    mode_id: jnp.ndarray,
+    aggregator: jnp.ndarray,
+) -> jnp.ndarray:
+    """C-FL benchmark: star aggregation at `aggregator` via min-PER routes.
+
+    Uplink: segment l of client m reaches the aggregator w.p. rho[m, a].
+    Downlink: the global segment reaches client n w.p. rho[a, n]; on failure
+    the client keeps its own local segment (paper's C-FL description).
+    """
+    n, l, k = w_seg.shape
+    kup, kdn = jax.random.split(key)
+    aggregator = jnp.asarray(aggregator, jnp.int32)
+
+    # Uplink success mask for each sender/segment, destination = aggregator.
+    rho_up = jnp.take(rho[:n], aggregator, axis=1)            # (N,)
+    e_up = (jax.random.uniform(kup, (n, l)) < rho_up[:, None]).astype(
+        jnp.float32
+    )
+    e_up = e_up.at[aggregator].set(1.0)
+    w_own = jnp.take(w_seg, aggregator, axis=0)               # (L, K)
+
+    def _normalized(_):
+        wts = p[:, None] * e_up                               # (N, L)
+        denom = jnp.maximum(jnp.sum(wts, axis=0), 1e-12)      # (L,)
+        return jnp.einsum("ml,mlk->lk", wts, w_seg) / denom[:, None]
+
+    def _substitution(_):  # aggregator substitutes its own segments
+        recv = jnp.einsum("ml,mlk->lk", p[:, None] * e_up, w_seg)
+        miss = jnp.einsum("ml->l", p[:, None] * (1.0 - e_up))
+        return recv + miss[:, None] * w_own
+
+    g = jax.lax.cond(mode_id == 0, _normalized, _substitution, None)
+
+    # Downlink: erroneous global segments replaced by the receiver's own.
+    rho_dn = jnp.take(rho[:, :n], aggregator, axis=0)         # (N,)
+    e_dn = (jax.random.uniform(kdn, (n, l)) < rho_dn[:, None]).astype(
+        jnp.float32
+    )
+    e_dn = e_dn.at[aggregator].set(1.0)
+    return e_dn[:, :, None] * g[None] + (1.0 - e_dn)[:, :, None] * w_seg
+
+
+def ideal_round_seg(w_seg: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Error-free C-FL (the paper's ideal reference in Fig. 9)."""
+    return aggregation.ideal(w_seg, p)
+
+
+def dispatch_round_seg(
+    w_seg: jnp.ndarray,
+    p: jnp.ndarray,
+    rho: jnp.ndarray,
+    link_eps: jnp.ndarray,
+    key: jax.Array,
+    protocol_id: jnp.ndarray,
+    mode_id: jnp.ndarray,
+    aggregator: jnp.ndarray,
+    *,
+    n_mixes: int = 1,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One exchange round with a fully traced (protocol, mode, aggregator).
+
+    Returns (new_w_seg, e, bias) where ``e`` is the sampled (N, N, L) success
+    mask for R&A (all-ones for other protocols) and ``bias`` is the mean
+    ||Lambda_l||_F^2 diagnostic (NaN where undefined, 0 for ideal C-FL) —
+    matching the scalar simulator's per-protocol bookkeeping.
+    """
+    n, l, _ = w_seg.shape
+    e_ones = jnp.ones((n, n, l), jnp.float32)
+    nan = jnp.asarray(jnp.nan, jnp.float32)
+
+    def b_ra(_):
+        out, e = ra_round_seg(w_seg, p, rho, key, mode_id)
+        return out, e, jnp.mean(aggregation.bias_sq_norm(p, e))
+
+    def b_aayg(_):
+        out = aayg_round_seg(w_seg, p, link_eps, key, mode_id, n_mixes=n_mixes)
+        return out, e_ones, nan
+
+    def b_cfl(_):
+        return cfl_round_seg(w_seg, p, rho, key, mode_id, aggregator), e_ones, nan
+
+    def b_ideal(_):
+        return ideal_round_seg(w_seg, p), e_ones, jnp.asarray(0.0, jnp.float32)
+
+    def b_none(_):
+        return w_seg, e_ones, nan
+
+    return jax.lax.switch(
+        protocol_id, (b_ra, b_aayg, b_cfl, b_ideal, b_none), None
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level wrappers (static string API — tests / interactive use).
+# ---------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("seg_len", "mode"))
 def ra_round(
     stacked: Pytree,
@@ -56,9 +215,7 @@ def ra_round(
     sampled (exposed for bias/Λ diagnostics).
     """
     w_seg, spec, m_params = _to_segments(stacked, seg_len)
-    n = w_seg.shape[0]
-    e = errors.sample_success(key, rho, w_seg.shape[1], n_clients=n)
-    out = aggregation.AGGREGATORS[mode](w_seg, p, e)
+    out, e = ra_round_seg(w_seg, p, rho, key, MODE_IDS[mode])
     return _from_segments(out, spec, m_params), e
 
 
@@ -73,27 +230,11 @@ def aayg_round(
     mode: str = "ra_normalized",
     n_mixes: int = 1,
 ) -> Pytree:
-    """Aggregate-as-You-Go gossip: J = n_mixes one-hop mix iterations.
-
-    ``link_eps`` is the (V, V) one-hop packet success matrix (0 where not
-    adjacent); only the leading N-client block participates (AaYG cannot
-    exploit routing-only relay nodes — Fig. 9 note).
-    """
+    """Aggregate-as-You-Go gossip round (see aayg_round_seg)."""
     w_seg, spec, m_params = _to_segments(stacked, seg_len)
-    n, l, _ = w_seg.shape
-    eps = link_eps[:n, :n]
-
-    def mix(w, key):
-        u = jax.random.uniform(key, (n, n, l))
-        e = (u < eps[:, :, None]).astype(jnp.float32)
-        e = jnp.maximum(e, jnp.eye(n)[:, :, None])  # own model always present
-        return aggregation.AGGREGATORS[mode](w, p, e)
-
-    keys = jax.random.split(key, n_mixes)
-    w_seg = jax.lax.fori_loop(
-        0, n_mixes, lambda j, w: mix(w, keys[j]), w_seg
-    )
-    return _from_segments(w_seg, spec, m_params)
+    out = aayg_round_seg(w_seg, p, link_eps, key, MODE_IDS[mode],
+                         n_mixes=n_mixes)
+    return _from_segments(out, spec, m_params)
 
 
 @partial(jax.jit, static_argnames=("seg_len", "mode", "aggregator"))
@@ -107,37 +248,9 @@ def cfl_round(
     mode: str = "ra_normalized",
     aggregator: int = 6,
 ) -> Pytree:
-    """C-FL benchmark: star aggregation at `aggregator` via min-PER routes.
-
-    Uplink: segment l of client m reaches the aggregator w.p. rho[m, a].
-    Downlink: the global segment reaches client n w.p. rho[a, n]; on failure
-    the client keeps its own local segment (paper's C-FL description).
-    """
+    """C-FL benchmark round (see cfl_round_seg)."""
     w_seg, spec, m_params = _to_segments(stacked, seg_len)
-    n, l, k = w_seg.shape
-    kup, kdn = jax.random.split(key)
-
-    # Uplink success mask for each sender/segment, destination = aggregator.
-    e_up = (jax.random.uniform(kup, (n, l)) < rho[:n, aggregator, None]).astype(
-        jnp.float32
-    )
-    e_up = e_up.at[aggregator].set(1.0)
-
-    if mode == "ra_normalized":
-        wts = p[:, None] * e_up                               # (N, L)
-        denom = jnp.maximum(jnp.sum(wts, axis=0), 1e-12)      # (L,)
-        g = jnp.einsum("ml,mlk->lk", wts, w_seg) / denom[:, None]
-    else:  # substitution: aggregator substitutes its own segments
-        recv = jnp.einsum("ml,mlk->lk", p[:, None] * e_up, w_seg)
-        miss = jnp.einsum("ml->l", p[:, None] * (1.0 - e_up))
-        g = recv + miss[:, None] * w_seg[aggregator]
-
-    # Downlink: erroneous global segments replaced by the receiver's own.
-    e_dn = (jax.random.uniform(kdn, (n, l)) < rho[aggregator, :n, None]).astype(
-        jnp.float32
-    )
-    e_dn = e_dn.at[aggregator].set(1.0)
-    out = e_dn[:, :, None] * g[None] + (1.0 - e_dn)[:, :, None] * w_seg
+    out = cfl_round_seg(w_seg, p, rho, key, MODE_IDS[mode], aggregator)
     return _from_segments(out, spec, m_params)
 
 
@@ -145,5 +258,4 @@ def cfl_round(
 def ideal_cfl_round(stacked: Pytree, p: jnp.ndarray, *, seg_len: int) -> Pytree:
     """Error-free C-FL (the paper's ideal reference in Fig. 9)."""
     w_seg, spec, m_params = _to_segments(stacked, seg_len)
-    out = aggregation.ideal(w_seg, p)
-    return _from_segments(out, spec, m_params)
+    return _from_segments(ideal_round_seg(w_seg, p), spec, m_params)

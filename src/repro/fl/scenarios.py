@@ -1,0 +1,298 @@
+"""Batched scenario engine: vmapped multi-seed / multi-PER / multi-protocol
+sweeps in a single XLA dispatch.
+
+The paper's headline results (Figs. 2, 3, 8, 9; Table III) are sweeps over
+packet error rates, relay counts, protocols, and seeds.  Because the round
+loop (`repro.fl.simulator.round_step`) is a pure jitted function of a
+`Scenario` whose parameters are all traced arrays, a whole grid of scenarios
+compiles to ONE program and runs as ONE dispatch:
+
+    grid = ScenarioGrid.product(networks=[...], protocols=[...], seeds=[...])
+    res = run_grid(init_fn, apply_fn, data, grid, cfg)   # (G, rounds, N)
+
+Scenario axes:
+
+  * seed            — model init + channel realizations,
+  * link-PER        — any per-scenario `topology.Network` (packet length,
+                      edge density, TX power... all collapse into link_eps),
+  * relay count     — networks of different node counts are padded with
+                      isolated zero-quality nodes (routing is unaffected),
+  * protocol        — ra | aayg | cfl | ideal_cfl | none (traced id),
+  * aggregation     — ra_normalized | substitution (traced id),
+  * learning rate   — traced scalar.
+
+`run_sequential` runs the same grid through the same compiled scalar program
+one scenario at a time — the per-scenario-dispatch baseline for timing
+comparisons (see benchmarks/fig3_sweep.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocols, topology
+from repro.data.synthetic import FederatedDataset
+from repro.fl import simulator
+
+Pytree = Any
+
+PROTOCOL_IDS = protocols.PROTOCOL_IDS
+MODE_IDS = protocols.MODE_IDS
+
+
+def _pad_link_eps(link_eps: jnp.ndarray, v_max: int) -> jnp.ndarray:
+    """Pad a (V, V) link matrix to (v_max, v_max) with isolated nodes.
+
+    Padded nodes have zero link quality in/out, so Floyd–Warshall leaves
+    every real route untouched and the client block of rho is unchanged.
+    """
+    v = link_eps.shape[0]
+    return jnp.pad(jnp.asarray(link_eps, jnp.float32),
+                   ((0, v_max - v), (0, v_max - v)))
+
+
+@dataclasses.dataclass
+class ScenarioGrid:
+    """A flat batch of scenarios: every Scenario leaf stacked on axis 0."""
+
+    scenarios: simulator.Scenario   # leaves with leading G axis
+    labels: list[str]
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+    def scenario(self, i: int) -> simulator.Scenario:
+        """The i-th scalar Scenario (host-side slice of the batch)."""
+        return jax.tree.map(lambda leaf: leaf[i], self.scenarios)
+
+    @staticmethod
+    def concat(*grids: "ScenarioGrid") -> "ScenarioGrid":
+        """Join grids into one batch, re-padding link matrices to a common V
+        (heterogeneous sub-grids — e.g. a relay sweep plus its ideal
+        reference — still compile to a single program)."""
+        v_max = max(g.scenarios.link_eps.shape[-1] for g in grids)
+
+        def repad(g: ScenarioGrid) -> simulator.Scenario:
+            v = g.scenarios.link_eps.shape[-1]
+            return g.scenarios._replace(
+                link_eps=jnp.pad(g.scenarios.link_eps,
+                                 ((0, 0), (0, v_max - v), (0, v_max - v)))
+            )
+
+        stacked = jax.tree.map(
+            lambda *leaves: jnp.concatenate(leaves), *(repad(g) for g in grids)
+        )
+        labels = [lbl for g in grids for lbl in g.labels]
+        return ScenarioGrid(scenarios=stacked, labels=labels)
+
+    @staticmethod
+    def product(
+        *,
+        networks: Sequence[tuple[str, topology.Network]],
+        protocols: Sequence[tuple[str, str]] = (("ra", "ra_normalized"),),
+        seeds: Iterable[int] = (0,),
+        lrs: Iterable[float] = (0.05,),
+        aggregator: int = 6,
+    ) -> "ScenarioGrid":
+        """Cross networks x (protocol, mode) x seeds x lrs into one grid.
+
+        Args:
+          networks: (label, Network) pairs — one per topology/PER point.
+          protocols: (protocol, mode) string pairs (PROTOCOL_IDS / MODE_IDS).
+          seeds: model-init + channel seeds.
+          lrs: local GD step sizes.
+          aggregator: C-FL star center (shared; only read by cfl scenarios).
+        """
+        seeds = list(seeds)
+        lrs = list(lrs)
+        v_max = max(net.link_eps.shape[0] for _, net in networks)
+        rows, labels = [], []
+        for (net_label, net), (proto, mode), seed, lr in itertools.product(
+            networks, protocols, seeds, lrs
+        ):
+            rows.append(simulator.Scenario(
+                link_eps=_pad_link_eps(net.link_eps, v_max),
+                seed=jnp.asarray(seed, jnp.int32),
+                protocol_id=jnp.asarray(PROTOCOL_IDS[proto], jnp.int32),
+                mode_id=jnp.asarray(MODE_IDS[mode], jnp.int32),
+                aggregator=jnp.asarray(aggregator, jnp.int32),
+                lr=jnp.asarray(lr, jnp.float32),
+            ))
+            parts = [net_label, f"{proto}+{mode}"]
+            if len(seeds) > 1:
+                parts.append(f"s{seed}")
+            if len(lrs) > 1:
+                parts.append(f"lr{lr:g}")
+            labels.append("/".join(parts))
+        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *rows)
+        return ScenarioGrid(scenarios=stacked, labels=labels)
+
+
+@dataclasses.dataclass
+class GridResult:
+    """Stacked per-scenario trajectories from one batched dispatch."""
+
+    acc: np.ndarray        # (G, rounds, N) test accuracy
+    loss: np.ndarray       # (G, rounds, N) train loss
+    bias: np.ndarray       # (G, rounds)    mean ||Lambda_l||_F^2 (ra only)
+    labels: list[str]
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+    @property
+    def mean_acc(self) -> np.ndarray:
+        """(G, rounds) accuracy averaged across clients."""
+        return self.acc.mean(axis=2)
+
+    def result(self, key: int | str) -> simulator.SimResult:
+        """One scenario's trajectory as a scalar SimResult."""
+        i = self.labels.index(key) if isinstance(key, str) else key
+        return simulator.SimResult(
+            acc_per_client=self.acc[i],
+            loss_per_client=self.loss[i],
+            bias_norms=self.bias[i],
+        )
+
+    def items(self):
+        return ((lbl, self.result(i)) for i, lbl in enumerate(self.labels))
+
+
+def _metrics_to_grid_result(metrics: dict, labels: list[str]) -> GridResult:
+    return GridResult(
+        acc=np.asarray(metrics["acc"]),
+        loss=np.asarray(metrics["loss"]),
+        bias=np.asarray(metrics["bias"]),
+        labels=list(labels),
+    )
+
+
+def _hoist_uniform(batch: simulator.Scenario):
+    """Split a scenario batch into (in_axes, args): leaves constant across
+    the batch are hoisted out of the vmap (in_axes=None) so scalar control
+    flow (lax.switch / cond) stays scalar — a batched branch index would
+    otherwise force EVERY protocol branch to execute for every scenario.
+
+    `seed` always stays mapped so vmap has at least one mapped axis.
+    """
+    axes, args = {}, {}
+    for name, leaf in batch._asdict().items():
+        if leaf is None:
+            axes[name], args[name] = None, None
+            continue
+        arr = np.asarray(leaf)
+        if name != "seed" and (arr == arr[:1]).all():
+            axes[name], args[name] = None, jnp.asarray(arr[0])
+        else:
+            axes[name], args[name] = 0, leaf
+    return simulator.Scenario(**axes), simulator.Scenario(**args)
+
+
+class GridRunner:
+    """Compiled scenario-grid server: build once, dispatch many grids.
+
+    Binds (init, apply, data, statics) into the pure scenario program and
+    caches every jitted variant, so repeated `run()` calls with same-shaped
+    grids pay ZERO recompilation — the production serving loop for
+    many-scenario workloads.
+    """
+
+    def __init__(
+        self,
+        init_fn: Callable[[jax.Array], Pytree],
+        apply_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray],
+        data: FederatedDataset,
+        cfg: simulator.SimConfig,
+    ):
+        self.sim = simulator.build_sim(
+            init_fn, apply_fn, data,
+            seg_len=cfg.seg_len, local_epochs=cfg.local_epochs,
+            n_rounds=cfg.n_rounds, aayg_mixes=cfg.aayg_mixes,
+        )
+        self._jitted: dict[tuple, Callable] = {}  # one jit per in_axes sig
+        self._scalar = jax.jit(self.sim.run_scenario)
+
+    def run(self, grid: ScenarioGrid, *,
+            group_by_protocol: bool = True) -> GridResult:
+        """Run the whole grid through ONE jitted, vmapped training loop.
+
+        With ``group_by_protocol`` (default), scenarios are partitioned
+        into (protocol, mode)-homogeneous sub-batches: the protocol
+        selector is then a hoisted scalar, so each scenario executes only
+        ITS branch instead of all five (a vmapped lax.switch lowers to
+        select-over-all-branches).  Equal-sized groups share one compiled
+        program — e.g. a figure sweeping 3 protocol rows over 9 networks
+        compiles once and dispatches 3 times.  ``group_by_protocol=False``
+        forces the single fully-batched dispatch.
+        """
+        g = len(grid)
+        if group_by_protocol:
+            pid = np.asarray(grid.scenarios.protocol_id)
+            mid = np.asarray(grid.scenarios.mode_id)
+            groups: dict[tuple, list[int]] = {}
+            for i in range(g):
+                groups.setdefault((int(pid[i]), int(mid[i])), []).append(i)
+            index_groups = list(groups.values())
+        else:
+            index_groups = [list(range(g))]
+
+        rows: list[dict | None] = [None] * g
+        for idx in index_groups:
+            sub = jax.tree.map(
+                lambda leaf: leaf[np.asarray(idx)], grid.scenarios
+            )
+            axes, args = _hoist_uniform(sub)
+            sig = tuple(axes._asdict().items())
+            if sig not in self._jitted:
+                self._jitted[sig] = jax.jit(
+                    jax.vmap(self.sim.run_scenario, in_axes=(axes,))
+                )
+            metrics = self._jitted[sig](args)
+            for j, i in enumerate(idx):
+                rows[i] = jax.tree.map(lambda leaf: leaf[j], metrics)
+        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *rows)
+        return _metrics_to_grid_result(stacked, grid.labels)
+
+    def run_sequential(self, grid: ScenarioGrid) -> GridResult:
+        """Per-scenario-dispatch baseline: the compiled scalar program,
+        called once per grid row.  Semantically identical to `run()` (same
+        pure program, no vmap) — the timing baseline for dispatch-overhead
+        comparisons and equivalence tests."""
+        metrics = [self._scalar(grid.scenario(i)) for i in range(len(grid))]
+        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *metrics)
+        return _metrics_to_grid_result(stacked, grid.labels)
+
+
+def run_grid(
+    init_fn: Callable[[jax.Array], Pytree],
+    apply_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray],
+    data: FederatedDataset,
+    grid: ScenarioGrid,
+    cfg: simulator.SimConfig,
+    *,
+    group_by_protocol: bool = True,
+) -> GridResult:
+    """One-shot batched grid run (see GridRunner.run).
+
+    `cfg` supplies the static (shared) knobs: seg_len, local_epochs,
+    n_rounds, aayg_mixes.  Per-scenario knobs live in the grid.
+    """
+    runner = GridRunner(init_fn, apply_fn, data, cfg)
+    return runner.run(grid, group_by_protocol=group_by_protocol)
+
+
+def run_sequential(
+    init_fn: Callable[[jax.Array], Pytree],
+    apply_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray],
+    data: FederatedDataset,
+    grid: ScenarioGrid,
+    cfg: simulator.SimConfig,
+) -> GridResult:
+    """One-shot per-scenario-dispatch baseline (see GridRunner)."""
+    runner = GridRunner(init_fn, apply_fn, data, cfg)
+    return runner.run_sequential(grid)

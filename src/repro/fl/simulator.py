@@ -6,14 +6,19 @@ models are exchanged and locally aggregated under the selected protocol
 (R&A / AaYG / C-FL / ideal C-FL) with the selected aggregation mechanism
 (adaptive normalization / model substitution).
 
+The round loop is a PURE jitted function: a `Scenario` carries every
+per-scenario parameter as a traced array (protocol id, aggregation-mode id,
+link qualities, seed, learning rate), so one compiled program serves an
+arbitrary scenario — and `repro.fl.scenarios.run_grid` can `jax.vmap` the
+whole training loop across a scenario grid in a single XLA dispatch.
+
 The simulator is model-agnostic: pass any (init, apply) pair from
 `repro.models.smallnets` (or a closure).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +44,43 @@ class SimConfig:
     seed: int = 0
 
 
+class Scenario(NamedTuple):
+    """One grid point, every field a traced array (vmap-able pytree).
+
+    ``link_eps`` is a (V, V) per-link packet success matrix; scenarios with
+    fewer physical nodes (e.g. fewer relays) are padded with isolated
+    zero-quality nodes, which leaves the routed client block unchanged.
+    ``rho`` is the derived E2E success matrix — None until `prepare`.
+    """
+
+    link_eps: jnp.ndarray         # (V, V)
+    seed: jnp.ndarray             # () int32   model-init / channel seed
+    protocol_id: jnp.ndarray      # () int32   protocols.PROTOCOL_IDS
+    mode_id: jnp.ndarray          # () int32   protocols.MODE_IDS
+    aggregator: jnp.ndarray       # () int32   C-FL star center
+    lr: jnp.ndarray               # () float32 local GD step size
+    rho: Any = None               # (V, V) E2E success (derived)
+
+    def prepare(self) -> "Scenario":
+        """Fill the derived min-E2E-PER success matrix (idempotent)."""
+        if self.rho is not None:
+            return self
+        rho, _ = routing.e2e_success(self.link_eps)
+        return self._replace(rho=rho)
+
+
+def make_scenario(net: topology.Network, cfg: SimConfig) -> Scenario:
+    """Lift a (Network, SimConfig) pair into a traced Scenario."""
+    return Scenario(
+        link_eps=jnp.asarray(net.link_eps, jnp.float32),
+        seed=jnp.asarray(cfg.seed, jnp.int32),
+        protocol_id=jnp.asarray(protocols.PROTOCOL_IDS[cfg.protocol], jnp.int32),
+        mode_id=jnp.asarray(protocols.MODE_IDS[cfg.mode], jnp.int32),
+        aggregator=jnp.asarray(cfg.cfl_aggregator, jnp.int32),
+        lr=jnp.asarray(cfg.lr, jnp.float32),
+    )
+
+
 @dataclasses.dataclass
 class SimResult:
     acc_per_client: np.ndarray    # (rounds, N) test accuracy
@@ -50,21 +92,134 @@ class SimResult:
         return self.acc_per_client.mean(axis=1)
 
 
-def _local_train_fn(apply_fn, lr: float, epochs: int):
-    """Full-batch GD for `epochs` epochs (paper eq. 3), vmapped over clients."""
+def _pad_shards(data: FederatedDataset) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad client shards to a common size (full-batch GD per paper)."""
+    max_sz = max(len(x) for x in data.train_x)
+
+    def pad(x):
+        reps = -(-max_sz // len(x))
+        return np.tile(x, (reps,) + (1,) * (x.ndim - 1))[:max_sz]
+
+    xs = jnp.asarray(np.stack([pad(x) for x in data.train_x]))
+    ys = jnp.asarray(np.stack([pad(y) for y in data.train_y]))
+    return xs, ys
+
+
+@dataclasses.dataclass(frozen=True)
+class SimPrograms:
+    """Pure functions of one (init, apply, data, statics) binding.
+
+    ``round_step(state, rng, scenario) -> (state, metrics)`` advances one
+    D-FL round; ``run_scenario(scenario) -> metrics`` scans it n_rounds
+    times.  Both are jit/vmap-safe; `run_scenario` is what `scenarios.
+    run_grid` vmaps across a grid.
+    """
+
+    round_step: Callable[[dict, jax.Array, Scenario], tuple[dict, dict]]
+    run_scenario: Callable[[Scenario], dict]
+    n_clients: int
+    n_rounds: int
+
+
+def build_sim(
+    init_fn: Callable[[jax.Array], Pytree],
+    apply_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray],
+    data: FederatedDataset,
+    *,
+    seg_len: int,
+    local_epochs: int,
+    n_rounds: int,
+    aayg_mixes: int = 1,
+) -> SimPrograms:
+    """Bind data + statics into the pure scenario programs."""
+    n = data.n_clients
+    p = jnp.asarray(data.weights())
+    xs, ys = _pad_shards(data)
+    test_x = jnp.asarray(data.test_x)
+    test_y = jnp.asarray(data.test_y)
 
     def loss(params, x, y):
         return ce_loss(apply_fn(params, x), y)
 
-    def train_one(params, x, y):
-        def body(p, _):
-            g = jax.grad(loss)(p, x, y)
-            return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+    def local_train(stacked, lr):
+        """Full-batch GD for `local_epochs` epochs (paper eq. 3), per client."""
 
-        params, _ = jax.lax.scan(body, params, None, length=epochs)
-        return params
+        def train_one(params, x, y):
+            def body(prm, _):
+                g = jax.grad(loss)(prm, x, y)
+                return jax.tree.map(lambda w, gw: w - lr * gw, prm, g), None
 
-    return jax.jit(jax.vmap(train_one))
+            params, _ = jax.lax.scan(body, params, None, length=local_epochs)
+            return params
+
+        return jax.vmap(train_one)(stacked, xs, ys)
+
+    def evaluate(stacked):
+        def one(params):
+            return accuracy(apply_fn(params, test_x), test_y)
+
+        return jax.vmap(one)(stacked)
+
+    def train_loss(stacked):
+        def one(params, x, y):
+            return ce_loss(apply_fn(params, x), y)
+
+        return jax.vmap(one)(stacked, xs, ys)
+
+    def round_step(state: dict, rng: jax.Array, scenario: Scenario):
+        """One pure D-FL round: local training + traced-protocol exchange.
+
+        state: {"params": client-stacked pytree}; rng: this round's key.
+        """
+        stacked = local_train(state["params"], scenario.lr)
+        w_seg, spec, m_params = protocols._to_segments(stacked, seg_len)
+        w_seg, _e, bias = protocols.dispatch_round_seg(
+            w_seg, p, scenario.rho, scenario.link_eps, rng,
+            scenario.protocol_id, scenario.mode_id, scenario.aggregator,
+            n_mixes=aayg_mixes,
+        )
+        stacked = protocols._from_segments(w_seg, spec, m_params)
+        metrics = {
+            "acc": evaluate(stacked),
+            "loss": train_loss(stacked),
+            "bias": bias,
+        }
+        return {"params": stacked}, metrics
+
+    def run_scenario(scenario: Scenario) -> dict:
+        scenario = scenario.prepare()
+        key = jax.random.PRNGKey(scenario.seed)
+        # Same init on every client (paper: common model structure + start).
+        params0 = init_fn(key)
+        stacked = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None], (n,) + leaf.shape), params0
+        )
+
+        def body(carry, _):
+            state, key = carry
+            key, k_round = jax.random.split(key)
+            state, metrics = round_step(state, k_round, scenario)
+            return (state, key), metrics
+
+        _, metrics = jax.lax.scan(
+            body, ({"params": stacked}, key), None, length=n_rounds
+        )
+        return metrics
+
+    return SimPrograms(
+        round_step=round_step,
+        run_scenario=run_scenario,
+        n_clients=n,
+        n_rounds=n_rounds,
+    )
+
+
+def metrics_to_result(metrics: dict) -> SimResult:
+    return SimResult(
+        acc_per_client=np.asarray(metrics["acc"]),
+        loss_per_client=np.asarray(metrics["loss"]),
+        bias_norms=np.asarray(metrics["bias"]),
+    )
 
 
 def run(
@@ -74,76 +229,15 @@ def run(
     net: topology.Network,
     cfg: SimConfig,
 ) -> SimResult:
-    n = data.n_clients
-    p = jnp.asarray(data.weights())
-    rho, next_hop = routing.e2e_success(net.link_eps)
-    key = jax.random.PRNGKey(cfg.seed)
-
-    # Same init on every client (paper: common model structure + start).
-    params0 = init_fn(key)
-    stacked = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), params0)
-
-    # Pad client shards to a common size (full-batch GD per paper).
-    max_sz = max(len(x) for x in data.train_x)
-    def pad(x):
-        reps = -(-max_sz // len(x))
-        return np.tile(x, (reps,) + (1,) * (x.ndim - 1))[:max_sz]
-    xs = jnp.asarray(np.stack([pad(x) for x in data.train_x]))
-    ys = jnp.asarray(np.stack([pad(y) for y in data.train_y]))
-
-    local_train = _local_train_fn(apply_fn, cfg.lr, cfg.local_epochs)
-    test_x = jnp.asarray(data.test_x)
-    test_y = jnp.asarray(data.test_y)
-
-    @jax.jit
-    def evaluate(stacked):
-        def one(params):
-            logits = apply_fn(params, test_x)
-            return accuracy(logits, test_y)
-        return jax.vmap(one)(stacked)
-
-    @jax.jit
-    def train_loss(stacked):
-        def one(params, x, y):
-            return ce_loss(apply_fn(params, x), y)
-        return jax.vmap(one)(stacked, xs, ys)
-
-    accs, losses, biases = [], [], []
-    for t in range(cfg.n_rounds):
-        key, k_round = jax.random.split(key)
-        stacked = local_train(stacked, xs, ys)
-
-        if cfg.protocol == "ra":
-            stacked, e = protocols.ra_round(
-                stacked, p, rho, k_round, seg_len=cfg.seg_len, mode=cfg.mode
-            )
-            from repro.core.aggregation import bias_sq_norm
-            biases.append(float(jnp.mean(bias_sq_norm(p, e))))
-        elif cfg.protocol == "aayg":
-            stacked = protocols.aayg_round(
-                stacked, p, net.link_eps, k_round, seg_len=cfg.seg_len,
-                mode=cfg.mode, n_mixes=cfg.aayg_mixes,
-            )
-            biases.append(np.nan)
-        elif cfg.protocol == "cfl":
-            stacked = protocols.cfl_round(
-                stacked, p, rho, k_round, seg_len=cfg.seg_len, mode=cfg.mode,
-                aggregator=cfg.cfl_aggregator,
-            )
-            biases.append(np.nan)
-        elif cfg.protocol == "ideal_cfl":
-            stacked = protocols.ideal_cfl_round(stacked, p, seg_len=cfg.seg_len)
-            biases.append(0.0)
-        elif cfg.protocol == "none":
-            biases.append(np.nan)
-        else:
-            raise ValueError(cfg.protocol)
-
-        accs.append(np.asarray(evaluate(stacked)))
-        losses.append(np.asarray(train_loss(stacked)))
-
-    return SimResult(
-        acc_per_client=np.stack(accs),
-        loss_per_client=np.stack(losses),
-        bias_norms=np.asarray(biases),
+    """Scalar entry point: one scenario, one jitted scan (legacy API)."""
+    sim = build_sim(
+        init_fn, apply_fn, data,
+        seg_len=cfg.seg_len, local_epochs=cfg.local_epochs,
+        n_rounds=cfg.n_rounds, aayg_mixes=cfg.aayg_mixes,
     )
+    metrics = jax.jit(sim.run_scenario)(make_scenario(net, cfg))
+    return metrics_to_result(metrics)
+
+
+# Alias: the scalar reference trajectory (see tests/test_scenarios.py).
+simulate = run

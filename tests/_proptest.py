@@ -1,0 +1,82 @@
+"""Minimal `hypothesis` stand-in for bare environments.
+
+The property tests in this suite only use `@given` with `st.integers` /
+`st.floats` plus `@settings(max_examples=..., deadline=None)`.  When the
+real `hypothesis` package is importable the test modules use it; otherwise
+they fall back to this shim, which replays `max_examples` seeded
+`numpy.random` draws per test — deterministic, dependency-free, and enough
+to keep the property tier *running* (not skipped) everywhere.
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:                      # bare env: seeded-draw fallback
+        from _proptest import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 25
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class st:  # namespace mirroring `hypothesis.strategies`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Record max_examples on the test fn (deadline etc. are no-ops here)."""
+
+    def deco(fn):
+        fn._proptest_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Replay `max_examples` seeded draws through the wrapped test."""
+
+    def deco(fn):
+        n_examples = getattr(fn, "_proptest_max_examples", _DEFAULT_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n_examples):
+                drawn = tuple(s.draw(rng) for s in strategies)
+                fn(*args, *drawn, **kwargs)
+
+        # Hide the strategy-filled (trailing) parameters from pytest, which
+        # would otherwise try to resolve them as fixtures; keep any leading
+        # ones (real fixtures) visible.
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(params[:-len(strategies)])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -2,8 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare env: seeded-draw fallback (tests/_proptest.py)
+    from _proptest import given, settings, st
 
 from repro.core import aggregation, convergence, errors, routing, topology
 
@@ -88,6 +92,72 @@ def test_eq17_bound_dominates_monte_carlo():
     mc = float(np.mean(trials))
     bound = float(convergence.lambda_bound(p, rho))
     assert mc <= bound * 1.05, (mc, bound)
+
+
+def _random_mask(key, n, l, density):
+    """A valid success mask: Bernoulli(density) with the own-model diagonal."""
+    e = (jax.random.uniform(key, (n, n, l)) < density).astype(jnp.float32)
+    return jnp.maximum(e, jnp.eye(n)[:, :, None])
+
+
+@given(st.integers(0, 10_000), st.floats(0.05, 0.95))
+@settings(max_examples=25, deadline=None)
+def test_coefficients_column_stochastic_any_mask(seed, density):
+    """Column-stochastic over senders for EVERY (receiver, segment), for
+    arbitrary (not just iid-uniform) success masks."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2)
+    n, l = 7, 6
+    p = jax.nn.softmax(jax.random.normal(ks[0], (n,)))
+    e = _random_mask(ks[1], n, l, density)
+    coeff = np.asarray(aggregation.aggregation_coefficients(p, e))
+    np.testing.assert_allclose(coeff.sum(axis=0), 1.0, atol=1e-5)
+    assert (coeff >= 0.0).all()
+    # coefficients of lost segments are exactly zero
+    np.testing.assert_array_equal(coeff[np.asarray(e) == 0.0], 0.0)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_ra_normalized_equals_ideal_when_all_delivered(seed):
+    """e == 1 everywhere: adaptive normalization IS the ideal average."""
+    w, p, e = _setup(seed % 100)
+    out = aggregation.ra_normalized(w, p, jnp.ones_like(e))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(aggregation.ideal(w, p)), atol=1e-5
+    )
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_substitution_degrades_to_own_segment_when_all_senders_fail(seed):
+    """All senders fail for one receiver: substitution yields exactly the
+    receiver's own segments (sum_m p_m * w_own = w_own)."""
+    w, p, _ = _setup(seed % 100)
+    n, l, _ = w.shape
+    rx = seed % n
+    e = jnp.ones((n, n, l)).at[:, rx, :].set(0.0)
+    e = jnp.maximum(e, jnp.eye(n)[:, :, None])
+    out = aggregation.substitution(w, p, e)
+    np.testing.assert_allclose(np.asarray(out[rx]), np.asarray(w[rx]), atol=1e-5)
+
+
+@given(st.integers(0, 10_000), st.floats(0.1, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_apply_mode_matches_static_dispatch(seed, density):
+    """Traced-mode switch (scenario engine substrate) == static aggregator."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    n, l, k = 5, 4, 8
+    w = jax.random.normal(ks[0], (n, l, k))
+    p = jax.nn.softmax(jax.random.normal(ks[1], (n,)))
+    e = _random_mask(ks[2], n, l, density)
+    for name, mode_id in aggregation.MODE_IDS.items():
+        got = aggregation.apply_mode(jnp.asarray(mode_id), w, p, e)
+        want = aggregation.AGGREGATORS[name](w, p, e)
+        # fusion inside lax.switch may differ by 1 ulp from the direct call
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6, rtol=1e-6)
 
 
 def test_bias_decreases_with_rho():

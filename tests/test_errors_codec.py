@@ -2,8 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare env: seeded-draw fallback (tests/_proptest.py)
+    from _proptest import given, settings, st
 
 from repro.core import errors
 

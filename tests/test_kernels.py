@@ -40,6 +40,31 @@ def test_ra_aggregate_block_sweep():
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+@pytest.mark.parametrize("n,l,k", [
+    (7, 11, 100),   # nothing aligned: odd N, prime L, K not a lane multiple
+    (5, 3, 96),     # L < default block_l
+    (13, 9, 192),   # odd N, L coprime with block_l
+    (6, 10, 130),   # K not a multiple of 128
+    (3, 1, 36),     # single segment
+])
+def test_ra_aggregate_golden_odd_shapes(n, l, k):
+    """Kernel vs pure-jnp oracle in interpret mode on CPU across shapes
+    where (N, L, K) are NOT multiples of the block size."""
+    key = jax.random.PRNGKey(n * 1000 + l * 10 + k)
+    ks = jax.random.split(key, 3)
+    w = jax.random.normal(ks[0], (n, l, k))
+    p = jax.nn.softmax(jax.random.normal(ks[1], (n,)))
+    e = (jax.random.uniform(ks[2], (n, n, l)) < 0.6).astype(jnp.float32)
+    e = jnp.maximum(e, jnp.eye(n)[:, :, None])
+    want = ref.ra_aggregate_ref(w, p, e)
+    for bl in (1, 4, 8):
+        got = ops.ra_aggregate(w, p, e, block_l=bl)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-5,
+            err_msg=f"block_l={bl}",
+        )
+
+
 @pytest.mark.parametrize("b,s,h,d", [
     (1, 32, 1, 16), (2, 64, 2, 32), (1, 128, 4, 64), (2, 96, 3, 16),
 ])

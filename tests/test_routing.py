@@ -3,8 +3,12 @@ import jax.numpy as jnp
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare env: seeded-draw fallback (tests/_proptest.py)
+    from _proptest import given, settings, st
 
 from repro.core import routing, topology
 

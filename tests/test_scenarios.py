@@ -1,0 +1,175 @@
+"""Batched scenario engine: grid == scalar equivalence + engine properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocols, routing, topology
+from repro.data import synthetic
+from repro.fl import scenarios, simulator
+from repro.models import smallnets
+
+
+def _toy_setup(n_clients=3):
+    data = synthetic.fed_image_classification(
+        n_clients=n_clients, samples_per_client=20, seed=0
+    )
+    net = topology.make_network(
+        topology.TABLE_II_COORDS[:n_clients], edge_density=0.8,
+        packet_len_bits=25_000, n_clients=n_clients, tx_power_dbm=17.0,
+    )
+    init = lambda k: smallnets.init_mlp_clf(k, d_in=32, d_hidden=16)
+    return data, net, init, smallnets.apply_mlp_clf
+
+
+@pytest.fixture(scope="module")
+def toy():
+    return _toy_setup()
+
+
+@pytest.mark.parametrize("protocol,mode", [
+    ("ra", "ra_normalized"),
+    ("ra", "substitution"),
+    ("aayg", "ra_normalized"),
+    ("cfl", "ra_normalized"),
+    ("ideal_cfl", "ra_normalized"),
+])
+def test_run_grid_one_point_matches_scalar_simulate(toy, protocol, mode):
+    """A 1-point grid reproduces the scalar simulate() trajectory
+    bit-for-bit (same seed, same config) — 3-client toy net."""
+    data, net, init, apply_fn = toy
+    cfg = simulator.SimConfig(
+        protocol=protocol, mode=mode, n_rounds=4, local_epochs=2,
+        seg_len=64, seed=3, cfl_aggregator=1,
+    )
+    want = simulator.simulate(init, apply_fn, data, net, cfg)
+    grid = scenarios.ScenarioGrid.product(
+        networks=[("toy", net)], protocols=[(protocol, mode)], seeds=[3],
+        aggregator=1,
+    )
+    got = scenarios.run_grid(init, apply_fn, data, grid, cfg)
+    assert len(got) == 1
+    np.testing.assert_array_equal(got.acc[0], want.acc_per_client)
+    np.testing.assert_array_equal(got.loss[0], want.loss_per_client)
+    np.testing.assert_array_equal(got.bias[0], want.bias_norms)
+
+
+def test_run_grid_matches_run_sequential(toy):
+    """vmapped batch == per-scenario dispatch of the same pure program."""
+    data, net, init, apply_fn = toy
+    cfg = simulator.SimConfig(n_rounds=3, local_epochs=2, seg_len=64,
+                              cfl_aggregator=0)
+    grid = scenarios.ScenarioGrid.product(
+        networks=[("toy", net)],
+        protocols=[("ra", "ra_normalized"), ("ra", "substitution"),
+                   ("aayg", "ra_normalized"), ("cfl", "ra_normalized"),
+                   ("ideal_cfl", "ra_normalized"), ("none", "ra_normalized")],
+        seeds=[0, 1], aggregator=0,
+    )
+    batched = scenarios.run_grid(init, apply_fn, data, grid, cfg)
+    seq = scenarios.run_sequential(init, apply_fn, data, grid, cfg)
+    np.testing.assert_array_equal(batched.acc, seq.acc)
+    np.testing.assert_array_equal(batched.loss, seq.loss)
+    np.testing.assert_array_equal(batched.bias, seq.bias)
+
+
+def test_grid_mixed_node_counts_pad_is_routing_neutral(toy):
+    """Scenarios with different node counts share one padded program, and
+    padding with isolated nodes leaves the client-block rho unchanged."""
+    data, net, init, apply_fn = toy
+    big = topology.make_network(
+        np.concatenate([topology.TABLE_II_COORDS[:3],
+                        topology.TABLE_II_COORDS[5:8]]),
+        edge_density=0.6, packet_len_bits=25_000, n_clients=3,
+        tx_power_dbm=17.0,
+    )
+    # rho of the padded small net == rho of the unpadded small net (clients).
+    v_max = big.link_eps.shape[0]
+    padded = scenarios._pad_link_eps(net.link_eps, v_max)
+    rho_pad, _ = routing.e2e_success(padded)
+    rho_raw, _ = routing.e2e_success(net.link_eps)
+    np.testing.assert_allclose(np.asarray(rho_pad[:3, :3]),
+                               np.asarray(rho_raw[:3, :3]), atol=1e-7)
+
+    cfg = simulator.SimConfig(n_rounds=2, local_epochs=1, seg_len=64)
+    grid = scenarios.ScenarioGrid.product(
+        networks=[("small", net), ("big", big)],
+        protocols=[("ra", "ra_normalized")],
+    )
+    res = scenarios.run_grid(init, apply_fn, data, grid, cfg)
+    assert res.acc.shape == (2, 2, 3)
+    assert np.isfinite(res.acc).all()
+
+
+def test_grid_labels_and_result_accessors(toy):
+    data, net, init, apply_fn = toy
+    cfg = simulator.SimConfig(n_rounds=2, local_epochs=1, seg_len=64)
+    grid = scenarios.ScenarioGrid.product(
+        networks=[("toy", net)],
+        protocols=[("ra", "ra_normalized"), ("none", "ra_normalized")],
+        seeds=[0, 7],
+    )
+    assert len(grid) == 4
+    assert grid.labels[0] == "toy/ra+ra_normalized/s0"
+    res = scenarios.run_grid(init, apply_fn, data, grid, cfg)
+    one = res.result("toy/none+ra_normalized/s7")
+    assert one.acc_per_client.shape == (2, 3)
+    assert res.mean_acc.shape == (4, 2)
+    assert dict(res.items())["toy/ra+ra_normalized/s0"].bias_norms.shape == (2,)
+
+
+def test_round_step_is_pure(toy):
+    """Same (state, rng, scenario) twice -> identical outputs; input state
+    is not mutated (the round loop is side-effect free)."""
+    data, net, init, apply_fn = toy
+    sim = simulator.build_sim(init, apply_fn, data, seg_len=64,
+                              local_epochs=1, n_rounds=2)
+    scen = simulator.make_scenario(net, simulator.SimConfig(lr=0.05)).prepare()
+    params0 = init(jax.random.PRNGKey(0))
+    stacked = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (3,) + l.shape), params0
+    )
+    state = {"params": stacked}
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), state["params"])
+    rng = jax.random.PRNGKey(42)
+    s1, m1 = sim.round_step(state, rng, scen)
+    s2, m2 = sim.round_step(state, rng, scen)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(m1["acc"]), np.asarray(m2["acc"]))
+    for a, b in zip(jax.tree.leaves(state["params"]), jax.tree.leaves(before)):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+def test_dispatch_round_matches_protocol_wrappers(toy):
+    """Traced protocol_id switch == the static pytree-level wrappers."""
+    data, net, init, apply_fn = toy
+    key = jax.random.PRNGKey(5)
+    n = 3
+    params = {"w": jax.random.normal(key, (n, 4, 6)),
+              "b": jax.random.normal(key, (n, 6))}
+    p = jnp.asarray(data.weights())
+    rho, _ = routing.e2e_success(net.link_eps)
+    seg_len = 5
+    w_seg, spec, m_params = protocols._to_segments(params, seg_len)
+
+    want, _ = protocols.ra_round(params, p, rho, key, seg_len=seg_len)
+    got_seg, _, _ = protocols.dispatch_round_seg(
+        w_seg, p, rho, net.link_eps, key,
+        jnp.asarray(protocols.PROTOCOL_IDS["ra"]), jnp.asarray(0),
+        jnp.asarray(0),
+    )
+    got = protocols._from_segments(got_seg, spec, m_params)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    want = protocols.cfl_round(params, p, rho, key, seg_len=seg_len,
+                               aggregator=1)
+    got_seg, _, _ = protocols.dispatch_round_seg(
+        w_seg, p, rho, net.link_eps, key,
+        jnp.asarray(protocols.PROTOCOL_IDS["cfl"]), jnp.asarray(0),
+        jnp.asarray(1),
+    )
+    got = protocols._from_segments(got_seg, spec, m_params)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
