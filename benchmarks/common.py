@@ -4,9 +4,14 @@ Sweep benchmarks build a `ScenarioGrid` from the same standard setup and run
 the whole figure in ONE `scenarios.run_grid` dispatch (the batched scenario
 engine); `standard_fl` keeps the scalar one-scenario path for benchmarks that
 genuinely need a single run.
+
+Setting ``REPRO_GRID_DEVICES=k`` shards every figure's grid dispatch over
+the first k jax devices (see `grid_devices`); combine with
+``XLA_FLAGS=--xla_force_host_platform_device_count=k`` on CPU.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -25,6 +30,33 @@ HARSH_TX_DBM = 17.0
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def grid_devices():
+    """The benchmark-wide grid-sharding knob (`REPRO_GRID_DEVICES=k`).
+
+    Returns the first k jax devices when the env var is a positive int,
+    else None (single-device vmap path).  Every figure that dispatches a
+    `ScenarioGrid` routes this through `scenarios.run_grid(devices=...)`.
+    """
+    raw = os.environ.get("REPRO_GRID_DEVICES", "").strip() or "0"
+    try:
+        k = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_GRID_DEVICES must be an integer device count, got {raw!r}"
+        ) from None
+    if k <= 0:
+        return None
+    import jax
+
+    if k > jax.device_count():
+        raise ValueError(
+            f"REPRO_GRID_DEVICES={k} but only {jax.device_count()} device(s) "
+            "visible — on CPU combine with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={k}"
+        )
+    return jax.devices()[:k]
 
 
 def timed(fn, *args, repeats: int = 1, **kw):
@@ -70,19 +102,31 @@ def standard_cfg(n_rounds=15, seg_len=256, aayg_mixes=1, seed=0, **kw):
     )
 
 
+# run_standard_grid's devices default: resolve the REPRO_GRID_DEVICES knob
+# (so an explicit devices=None still forces the single-device path).
+_ENV_DEVICES = object()
+
+
 def run_standard_grid(grid: scenarios.ScenarioGrid, *, n_rounds=15,
                       seg_len=256, aayg_mixes=1, data_seed=0,
-                      samples_per_client=80) -> scenarios.GridResult:
+                      samples_per_client=80,
+                      devices=_ENV_DEVICES) -> scenarios.GridResult:
     """One batched dispatch of `grid` on the standard data/model.
 
     ``data_seed`` seeds the shared dataset only; model-init / channel seeds
     are per-scenario and live in the grid (ScenarioGrid.product(seeds=...)).
+    ``devices`` shards the grid axis; by default the REPRO_GRID_DEVICES
+    knob decides, and an explicit ``devices=None`` forces the
+    single-device vmap path regardless of the environment.
     """
     data = standard_data(seed=data_seed, samples_per_client=samples_per_client)
     init, apply_fn = standard_model()
     cfg = standard_cfg(n_rounds=n_rounds, seg_len=seg_len,
                        aayg_mixes=aayg_mixes)
-    return scenarios.run_grid(init, apply_fn, data, grid, cfg)
+    if devices is _ENV_DEVICES:
+        devices = grid_devices()
+    return scenarios.run_grid(init, apply_fn, data, grid, cfg,
+                              devices=devices)
 
 
 def standard_fl(n_rounds=15, protocol="ra", mode="ra_normalized",

@@ -4,7 +4,8 @@ Validates: R&A+adaptive-norm > {R&A+substitution, AaYG, C-FL}; R&A clients
 are more consistent (smaller spread).  Harsh channel (reduced TX power)
 makes communication errors bite at CPU scale.
 
-All six (protocol, mechanism) rows run in ONE batched `run_grid` dispatch.
+All six (protocol, mechanism) rows run in ONE batched `run_grid` dispatch;
+`REPRO_GRID_DEVICES=k` shards the dispatch over k devices (common.py).
 """
 import time
 

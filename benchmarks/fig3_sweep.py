@@ -13,6 +13,9 @@ one batched dispatch per protocol row.  The timing printout compares:
   * legacy retrace — the seed-code behavior (static protocol/mode config:
                      every sweep point re-traced + re-compiled), measured
                      on a subset and extrapolated.
+
+`REPRO_GRID_DEVICES=k` shards the batched dispatch over k devices;
+benchmarks/grid_scaling.py sweeps this grid over device counts.
 """
 import time
 
@@ -45,7 +48,8 @@ def main() -> None:
     data = common.standard_data()
     init, apply_fn = common.standard_model()
     cfg = common.standard_cfg(n_rounds=N_ROUNDS)
-    runner = scenarios.GridRunner(init, apply_fn, data, cfg)
+    runner = scenarios.GridRunner(init, apply_fn, data, cfg,
+                                  devices=common.grid_devices())
 
     t0 = time.time()
     res = runner.run(grid)                      # single run_grid call

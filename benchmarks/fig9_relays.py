@@ -5,7 +5,8 @@ approaches ideal error-free C-FL.
 
 The relay axis changes the physical node count; the scenario engine pads
 every network to the largest V with isolated nodes (routing-neutral), so the
-whole figure — ideal reference included — is ONE batched `run_grid` call.
+whole figure — ideal reference included — is ONE batched `run_grid` call;
+`REPRO_GRID_DEVICES=k` shards the dispatch over k devices (common.py).
 """
 import time
 

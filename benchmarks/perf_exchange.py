@@ -7,7 +7,9 @@ collective bytes in the lowered SPMD module.
 
 Part 2 measures the batched scenario engine on the exchange-heavy regime:
 a 16-point PER sweep dispatched once via `scenarios.run_grid` vs the same
-compiled scalar program dispatched per scenario (`run_sequential`).
+compiled scalar program dispatched per scenario (`run_sequential`), plus
+the sharded path (`devices=`) spreading the 16 scenarios over the 16
+forced host devices — one scenario per device.
 
 Runs standalone (needs its own device count):
 
@@ -101,6 +103,20 @@ def grid_dispatch() -> None:
     t0 = time.time()
     runner.run_sequential(grid)
     t_seq = time.time() - t0
+
+    # Sharded path: one scenario per forced host device (same runner, the
+    # per-mesh program cache keeps both variants warm).  Cap the mesh at
+    # the grid size — collective_schedules' dryrun import forces 512 host
+    # devices, and a mesh wider than the grid is pure filler.
+    devs = jax.devices()[:min(len(grid), jax.device_count())]
+    t0 = time.time()
+    sharded = runner.run(grid, devices=devs)
+    t_shard_cold = time.time() - t0
+    t0 = time.time()
+    runner.run(grid, devices=devs)
+    t_shard_warm = time.time() - t0
+    assert np.array_equal(np.asarray(sharded.acc), np.asarray(res.acc))
+
     acc_lo, acc_hi = res.mean_acc[0, -1], res.mean_acc[-1, -1]
     print(
         f"perf_exchange/grid_dispatch,{t_warm * 1e6:.1f},"
@@ -108,6 +124,8 @@ def grid_dispatch() -> None:
         f"batched_warm_s={t_warm:.2f};"
         f"per_scenario_dispatch_s={t_seq:.2f};"
         f"warm_speedup={t_seq / max(t_warm, 1e-9):.2f}x;"
+        f"sharded{len(devs)}_cold_s={t_shard_cold:.2f};"
+        f"sharded{len(devs)}_warm_s={t_shard_warm:.2f};"
         f"acc_worst_channel={acc_lo:.3f};acc_best_channel={acc_hi:.3f}"
     )
 

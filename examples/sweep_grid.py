@@ -3,11 +3,18 @@
 Builds a grid crossing two packet lengths x three protocol rows x two seeds
 (12 scenarios) and runs the whole thing through ONE vmapped, jitted training
 loop — the same engine the figure benchmarks use — then prints a small
-per-scenario table and the dispatch-cost comparison.
+per-scenario table, the dispatch-cost comparison, and a sharded dispatch
+over every visible device (`devices=jax.devices()`; results bit-identical).
 
 Run:  PYTHONPATH=src python examples/sweep_grid.py
+To see real grid sharding on CPU, force host devices first:
+      XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+          PYTHONPATH=src python examples/sweep_grid.py
 """
 import time
+
+import jax
+import numpy as np
 
 from repro.core import topology
 from repro.data import synthetic
@@ -63,9 +70,19 @@ def main() -> None:
     runner.run_sequential(grid)
     t_seq = time.time() - t0
 
+    # Sharded dispatch: the same grid spread over every visible device
+    # (a 1-device mesh on a default CPU — same API, same results).
+    devs = jax.devices()
+    t0 = time.time()
+    sharded = runner.run(grid, devices=devs)
+    t_sharded = time.time() - t0
+    assert np.array_equal(np.asarray(sharded.acc), np.asarray(res.acc))
+
     print(f"\nbatched, cold (compile + dispatch):    {t_batched:6.2f} s")
     print(f"batched, warm (new seeds, no compile): {t_warm:6.2f} s")
     print(f"per-scenario loop (incl. compile):     {t_seq:6.2f} s")
+    print(f"sharded over {len(devs)} device(s), cold:      {t_sharded:6.2f} s"
+          f"  (bit-identical)")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 """Batched scenario engine: vmapped multi-seed / multi-PER / multi-protocol
-sweeps in a single XLA dispatch.
+sweeps in a single XLA dispatch, optionally sharded across devices.
 
 The paper's headline results (Figs. 2, 3, 8, 9; Table III) are sweeps over
 packet error rates, relay counts, protocols, and seeds.  Because the round
@@ -21,25 +21,69 @@ Scenario axes:
   * aggregation     — ra_normalized | substitution (traced id),
   * learning rate   — traced scalar.
 
+Multi-device grids (DESIGN.md §7): pass ``devices=`` to `run_grid` /
+`GridRunner` and the grid axis is sharded over a 1-D ``('grid',)`` mesh
+(`repro.launch.mesh.grid_mesh`) via `shard_map` — each device executes the
+vmapped round loop on its slice of the batch, with NO cross-device
+collectives in the hot loop (scenarios are independent).  Batches that do
+not divide the device count are padded with routing-neutral filler
+scenarios (every node isolated — the same machinery that pads small
+networks) and unpadded on return; results are bit-identical to the
+single-device path:
+
+    res = run_grid(init_fn, apply_fn, data, grid, cfg, devices=jax.devices())
+
 `run_sequential` runs the same grid through the same compiled scalar program
 one scenario at a time — the per-scenario-dispatch baseline for timing
-comparisons (see benchmarks/fig3_sweep.py).
+comparisons (see benchmarks/fig3_sweep.py); `benchmarks/grid_scaling.py`
+measures scenarios/sec vs device count through the sharded path.
+
+Public API
+----------
+  ScenarioGrid.product(...)       build a cross-product grid
+  ScenarioGrid.concat(*grids)     join heterogeneous grids (re-pads V)
+  run_grid(..., devices=None)     one-shot batched (optionally sharded) run
+  run_sequential(...)             per-scenario-dispatch baseline
+  GridRunner(..., devices=None)   warm-program server for repeated grids
+  GridResult                      stacked trajectories + per-label access
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import itertools
 from typing import Any, Callable, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:                                    # public API since jax 0.6
+    from jax import shard_map
+except ImportError:                     # older jax (pre jax.shard_map)
+    from jax.experimental.shard_map import shard_map
+
+# The replication-check kwarg was renamed check_rep -> check_vma.
+_SHARD_MAP_NO_CHECK = {
+    ("check_vma" if "check_vma" in inspect.signature(shard_map).parameters
+     else "check_rep"): False
+}
 
 from repro.core import protocols, topology
 from repro.data.synthetic import FederatedDataset
 from repro.fl import simulator
+from repro.launch import mesh as launch_mesh
 
 Pytree = Any
+
+# Anything `GridRunner` accepts as a device/sharding spec: a prebuilt 1-D
+# mesh, a device sequence, a device count, or None (single-device vmap).
+DeviceSpec = Any
+
+# `GridRunner.run(devices=...)` default: inherit the runner's spec, so an
+# explicit devices=None can still force the single-device vmap path.
+_INHERIT = object()
 
 PROTOCOL_IDS = protocols.PROTOCOL_IDS
 MODE_IDS = protocols.MODE_IDS
@@ -54,6 +98,62 @@ def _pad_link_eps(link_eps: jnp.ndarray, v_max: int) -> jnp.ndarray:
     v = link_eps.shape[0]
     return jnp.pad(jnp.asarray(link_eps, jnp.float32),
                    ((0, v_max - v), (0, v_max - v)))
+
+
+def _pad_scenario_batch(batch: simulator.Scenario,
+                        g_target: int) -> simulator.Scenario:
+    """Pad a (G, ...)-leaved scenario batch to ``g_target`` rows.
+
+    Filler rows are routing-neutral whole-scenario analogues of the
+    isolated-node padding above: scalar fields copy row 0 (so a
+    (protocol, mode)-homogeneous group stays homogeneous and the hoisted
+    scalar dispatch survives padding) while ``link_eps`` is all-zero —
+    every node isolated, every segment falls back to the sender's own.
+    Filler results are dropped on unpad; they never reach a `GridResult`.
+    """
+    g = batch.link_eps.shape[0]
+    if g_target < g:
+        raise ValueError(f"cannot pad {g} scenarios down to {g_target}")
+    if g_target == g:
+        return batch
+    n_pad = g_target - g
+
+    def pad_leaf(name: str, leaf):
+        if leaf is None:
+            return None
+        filler = jnp.broadcast_to(leaf[:1], (n_pad,) + leaf.shape[1:])
+        if name == "link_eps":
+            filler = jnp.zeros_like(filler)
+        return jnp.concatenate([leaf, filler])
+
+    return simulator.Scenario(
+        **{name: pad_leaf(name, leaf)
+           for name, leaf in batch._asdict().items()}
+    )
+
+
+def _resolve_grid_mesh(devices: DeviceSpec,
+                       sharding: Any) -> jax.sharding.Mesh | None:
+    """Normalize the `devices=` / `sharding=` knobs into a 1-D mesh.
+
+    ``sharding`` wins over ``devices``; it may be a `jax.sharding.Mesh`
+    (must be 1-D) or a `NamedSharding` (its mesh is used).  ``devices`` is
+    anything `launch.mesh.grid_mesh` accepts.  Both None -> None (the
+    single-device vmap path).
+    """
+    if sharding is not None:
+        if isinstance(sharding, NamedSharding):
+            sharding = sharding.mesh
+        if not isinstance(sharding, jax.sharding.Mesh):
+            raise TypeError(f"sharding= must be a Mesh or NamedSharding, "
+                            f"got {type(sharding).__name__}")
+        if len(sharding.axis_names) != 1:
+            raise ValueError("grid sharding needs a 1-D mesh, got axes "
+                             f"{sharding.axis_names}")
+        return sharding
+    if devices is None:
+        return None
+    return launch_mesh.grid_mesh(devices)
 
 
 @dataclasses.dataclass
@@ -199,7 +299,21 @@ class GridRunner:
     Binds (init, apply, data, statics) into the pure scenario program and
     caches every jitted variant, so repeated `run()` calls with same-shaped
     grids pay ZERO recompilation — the production serving loop for
-    many-scenario workloads.
+    many-scenario workloads.  Compiled programs are cached PER (hoist
+    signature, mesh): a runner can serve single-device and sharded grids
+    (and different device subsets) side by side, each staying warm.
+
+    Args:
+      init_fn: model init, `key -> params` pytree.
+      apply_fn: forward pass, `(params, x) -> logits`.
+      data: the shared `FederatedDataset` (per-scenario knobs live in
+        the grid, NOT here).
+      cfg: static knobs baked into the compiled program — seg_len,
+        local_epochs, n_rounds, aayg_mixes.  Per-scenario fields of
+        `cfg` (protocol, mode, lr, seed) are ignored by the runner.
+      devices: default device spec for `run()` — a device sequence, an
+        int (first k devices), or None for the single-device vmap path.
+        Overridable per call.
     """
 
     def __init__(
@@ -208,17 +322,22 @@ class GridRunner:
         apply_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray],
         data: FederatedDataset,
         cfg: simulator.SimConfig,
+        *,
+        devices: DeviceSpec = None,
     ):
         self.sim = simulator.build_sim(
             init_fn, apply_fn, data,
             seg_len=cfg.seg_len, local_epochs=cfg.local_epochs,
             n_rounds=cfg.n_rounds, aayg_mixes=cfg.aayg_mixes,
         )
-        self._jitted: dict[tuple, Callable] = {}  # one jit per in_axes sig
+        self.devices = devices
+        self._jitted: dict[tuple, Callable] = {}  # (in_axes, mesh) -> jit
         self._scalar = jax.jit(self.sim.run_scenario)
 
     def run(self, grid: ScenarioGrid, *,
-            group_by_protocol: bool = True) -> GridResult:
+            group_by_protocol: bool = True,
+            devices: DeviceSpec = _INHERIT,
+            sharding: Any = None) -> GridResult:
         """Run the whole grid through ONE jitted, vmapped training loop.
 
         With ``group_by_protocol`` (default), scenarios are partitioned
@@ -229,7 +348,19 @@ class GridRunner:
         program — e.g. a figure sweeping 3 protocol rows over 9 networks
         compiles once and dispatches 3 times.  ``group_by_protocol=False``
         forces the single fully-batched dispatch.
+
+        ``devices=`` (or a prebuilt 1-D ``sharding=`` mesh) shards each
+        sub-batch over a ``('grid',)`` mesh via shard_map: the batch is
+        padded to a multiple of the device count with routing-neutral
+        filler scenarios, every device runs the vmapped loop on its slice
+        (no collectives), and results are gathered + unpadded —
+        bit-identical to the single-device path.  Defaults to the
+        runner's ``devices``; an explicit ``devices=None`` forces the
+        single-device vmap path regardless of the runner default.
         """
+        mesh = _resolve_grid_mesh(
+            self.devices if devices is _INHERIT else devices, sharding
+        )
         g = len(grid)
         if group_by_protocol:
             pid = np.asarray(grid.scenarios.protocol_id)
@@ -246,17 +377,69 @@ class GridRunner:
             sub = jax.tree.map(
                 lambda leaf: leaf[np.asarray(idx)], grid.scenarios
             )
-            axes, args = _hoist_uniform(sub)
-            sig = tuple(axes._asdict().items())
-            if sig not in self._jitted:
-                self._jitted[sig] = jax.jit(
-                    jax.vmap(self.sim.run_scenario, in_axes=(axes,))
-                )
-            metrics = self._jitted[sig](args)
+            if mesh is None:
+                metrics = self._dispatch_vmap(sub)
+            else:
+                metrics = self._dispatch_sharded(sub, mesh)
+            # Unpad: filler rows (j >= len(idx)) are simply never read.
             for j, i in enumerate(idx):
                 rows[i] = jax.tree.map(lambda leaf: leaf[j], metrics)
         stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *rows)
         return _metrics_to_grid_result(stacked, grid.labels)
+
+    def _dispatch_vmap(self, sub: simulator.Scenario) -> dict:
+        """Single-device path: jit(vmap) over the whole sub-batch."""
+        axes, args = _hoist_uniform(sub)
+        sig = (tuple(axes._asdict().items()), None)
+        if sig not in self._jitted:
+            self._jitted[sig] = jax.jit(
+                jax.vmap(self.sim.run_scenario, in_axes=(axes,))
+            )
+        return self._jitted[sig](args)
+
+    def _dispatch_sharded(self, sub: simulator.Scenario,
+                          mesh: jax.sharding.Mesh) -> dict:
+        """Sharded path: pad to a device multiple, shard_map the vmap.
+
+        Each device runs `vmap(run_scenario)` over its (g_pad / D)-slice;
+        scenarios are independent, so the lowered per-device program has
+        no cross-device collectives — XLA only gathers the stacked metrics
+        at the end.  Returned leaves keep the PADDED leading axis.
+
+        A mesh wider than the sub-batch is shrunk to its first g devices:
+        the excess devices would only ever compute filler trajectories.
+        """
+        (axis_name,) = mesh.axis_names
+        g = sub.link_eps.shape[0]
+        if mesh.devices.size > g:
+            mesh = jax.sharding.Mesh(
+                np.asarray(list(mesh.devices.flat)[:g]), (axis_name,)
+            )
+        d = mesh.devices.size
+        sub = _pad_scenario_batch(sub, -(-g // d) * d)
+        axes, args = _hoist_uniform(sub)
+        mesh_key = (axis_name,) + tuple(dev.id for dev in mesh.devices.flat)
+        sig = (tuple(axes._asdict().items()), mesh_key)
+        if sig not in self._jitted:
+            specs = simulator.Scenario(**{
+                name: P(axis_name) if ax == 0 else P()
+                for name, ax in axes._asdict().items()
+            })
+            sharded = shard_map(
+                jax.vmap(self.sim.run_scenario, in_axes=(axes,)),
+                mesh=mesh, in_specs=(specs,), out_specs=P(axis_name),
+                # No collectives inside; skip the replication check (it
+                # rejects some primitives in the RNG/scan body).
+                **_SHARD_MAP_NO_CHECK,
+            )
+            self._jitted[sig] = (jax.jit(sharded), specs)
+        fn, specs = self._jitted[sig]
+        args = simulator.Scenario(**{
+            name: leaf if leaf is None else jax.device_put(
+                leaf, NamedSharding(mesh, getattr(specs, name)))
+            for name, leaf in args._asdict().items()
+        })
+        return fn(args)
 
     def run_sequential(self, grid: ScenarioGrid) -> GridResult:
         """Per-scenario-dispatch baseline: the compiled scalar program,
@@ -276,14 +459,19 @@ def run_grid(
     cfg: simulator.SimConfig,
     *,
     group_by_protocol: bool = True,
+    devices: DeviceSpec = None,
+    sharding: Any = None,
 ) -> GridResult:
     """One-shot batched grid run (see GridRunner.run).
 
     `cfg` supplies the static (shared) knobs: seg_len, local_epochs,
     n_rounds, aayg_mixes.  Per-scenario knobs live in the grid.
+    ``devices=`` / ``sharding=`` shard the grid axis across a device mesh
+    (bit-identical results; see the module docstring and DESIGN.md §7).
     """
     runner = GridRunner(init_fn, apply_fn, data, cfg)
-    return runner.run(grid, group_by_protocol=group_by_protocol)
+    return runner.run(grid, group_by_protocol=group_by_protocol,
+                      devices=devices, sharding=sharding)
 
 
 def run_sequential(

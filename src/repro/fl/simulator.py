@@ -10,10 +10,25 @@ The round loop is a PURE jitted function: a `Scenario` carries every
 per-scenario parameter as a traced array (protocol id, aggregation-mode id,
 link qualities, seed, learning rate), so one compiled program serves an
 arbitrary scenario — and `repro.fl.scenarios.run_grid` can `jax.vmap` the
-whole training loop across a scenario grid in a single XLA dispatch.
+whole training loop across a scenario grid in a single XLA dispatch (and,
+with ``devices=``, shard that grid across a device mesh; DESIGN.md §7).
 
 The simulator is model-agnostic: pass any (init, apply) pair from
 `repro.models.smallnets` (or a closure).
+
+Public API
+----------
+  SimConfig                 static + default per-scenario knobs
+  Scenario / make_scenario  one grid point, all fields traced arrays
+  build_sim(...)            bind (init, apply, data, statics) -> SimPrograms
+  SimPrograms.round_step    (state, rng, scenario) -> (state, metrics)
+  SimPrograms.run_scenario  scenario -> metrics dict (scanned n_rounds)
+  run / simulate            scalar one-scenario entry point -> SimResult
+  metrics_to_result         metrics dict -> SimResult
+
+Purity contract: `round_step` and `run_scenario` are side-effect free
+functions of their arguments plus the statics bound by `build_sim` —
+jit/vmap/shard_map-safe by construction (see tests/test_scenarios.py).
 """
 from __future__ import annotations
 
@@ -33,6 +48,14 @@ Pytree = Any
 
 @dataclasses.dataclass
 class SimConfig:
+    """Simulation knobs.
+
+    Static fields (seg_len, local_epochs, n_rounds, aayg_mixes) are baked
+    into the compiled program; the rest are per-scenario defaults that
+    `make_scenario` lifts into traced `Scenario` fields (a `ScenarioGrid`
+    overrides them per grid point and ignores them here).
+    """
+
     protocol: str = "ra"          # ra | aayg | cfl | ideal_cfl | none
     mode: str = "ra_normalized"   # ra_normalized | substitution
     seg_len: int = 1024           # K values per packet (packet = 32K bits)
@@ -131,7 +154,22 @@ def build_sim(
     n_rounds: int,
     aayg_mixes: int = 1,
 ) -> SimPrograms:
-    """Bind data + statics into the pure scenario programs."""
+    """Bind data + statics into the pure scenario programs.
+
+    Args:
+      init_fn: model init, `key -> params` pytree (one shared init; the
+        paper assumes a common model structure + starting point).
+      apply_fn: forward pass, `(params, x) -> logits`.
+      data: federated dataset; client shards are padded to a common size
+        (full-batch GD per the paper) and closed over as constants.
+      seg_len: K values per packet segment (static).
+      local_epochs: I full-batch GD epochs per round (static).
+      n_rounds: scan length of `run_scenario` (static).
+      aayg_mixes: J one-hop mix iterations for AaYG (static).
+
+    Returns:
+      `SimPrograms` with `round_step` / `run_scenario` pure functions.
+    """
     n = data.n_clients
     p = jnp.asarray(data.weights())
     xs, ys = _pad_shards(data)

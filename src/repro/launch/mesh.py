@@ -1,13 +1,25 @@
-"""Production meshes for the multi-pod dry-run.
+"""Mesh construction: production SPMD meshes + the scenario-grid mesh.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state.  TPU v5e targets:
-  single pod : (16, 16)    = 256 chips, axes ('data', 'model')
-  multi-pod  : (2, 16, 16) = 512 chips, axes ('pod', 'data', 'model')
+Every mesh is built by a FUNCTION (not a module-level constant) so importing
+this module never touches jax device state.
+
+Two mesh families live here:
+
+  * `make_production_mesh` — the multi-pod dry-run meshes (DESIGN.md §5).
+    TPU v5e targets:
+      single pod : (16, 16)    = 256 chips, axes ('data', 'model')
+      multi-pod  : (2, 16, 16) = 512 chips, axes ('pod', 'data', 'model')
+  * `grid_mesh` — a 1-D ('grid',) mesh over whole devices, used by
+    `repro.fl.scenarios` to shard a batched scenario sweep so each device
+    runs its slice of the grid with no cross-device collectives in the hot
+    loop (DESIGN.md §7).
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
+import numpy as np
 
 # TPU v5e hardware constants (per chip) used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
@@ -23,3 +35,30 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def data_axes(*, multi_pod: bool = False):
     return ("pod", "data") if multi_pod else ("data",)
+
+
+GRID_AXIS = "grid"
+
+
+def grid_mesh(devices: Sequence[jax.Device] | int | None = None) -> jax.sharding.Mesh:
+    """1-D ``(GRID_AXIS,)`` mesh for sharding a scenario batch over devices.
+
+    Args:
+      devices: the devices to shard over — a sequence of `jax.Device`, an
+        int (the first k of `jax.devices()`), or None for all devices.
+
+    Returns:
+      A `jax.sharding.Mesh` with one axis named ``'grid'``.  Scenarios are
+      independent, so the grid axis needs no collectives; any device subset
+      (including a single device) is a valid mesh.
+    """
+    if devices is None:
+        devices = jax.devices()
+    elif isinstance(devices, int):
+        avail = jax.devices()
+        if not 1 <= devices <= len(avail):
+            raise ValueError(
+                f"grid_mesh: asked for {devices} devices, have {len(avail)}"
+            )
+        devices = avail[:devices]
+    return jax.sharding.Mesh(np.asarray(list(devices)), (GRID_AXIS,))

@@ -1,0 +1,99 @@
+"""Docs consistency checker (CI `docs` job).
+
+Two classes of failure:
+
+  * a "DESIGN.md &sect;<token>" reference anywhere in the tree (source
+    docstrings, README, ROADMAP) whose section heading does not exist in
+    DESIGN.md — the repo previously shipped five such dangling references
+    with no DESIGN.md at all;
+  * a relative markdown link in README.md / DESIGN.md / ROADMAP.md that
+    points at a missing file.
+
+Usage:  python tools/check_docs.py   (exit 1 + report on any failure)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SOURCE_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+DOC_FILES = ("README.md", "DESIGN.md", "ROADMAP.md")
+
+# "DESIGN.md §3", "(DESIGN.md §Roofline)", "DESIGN.md §4 config families"
+REF_RE = re.compile(r"DESIGN\.md\s+§([A-Za-z0-9][A-Za-z0-9.]*)")
+# DESIGN.md headings: "## §3 — ...", "## §Roofline — ..."
+HEADING_RE = re.compile(r"^#{1,6}\s+§([A-Za-z0-9][A-Za-z0-9.]*)", re.M)
+# [text](target) markdown links; anchors and URLs filtered below
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def iter_source_files():
+    for d in SOURCE_DIRS:
+        for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, d)):
+            dirnames[:] = [n for n in dirnames if n != "__pycache__"]
+            for name in filenames:
+                if name.endswith((".py", ".md")):
+                    yield os.path.join(dirpath, name)
+    for name in DOC_FILES:
+        path = os.path.join(ROOT, name)
+        if os.path.exists(path):
+            yield path
+
+
+def check_design_refs() -> list[str]:
+    design_path = os.path.join(ROOT, "DESIGN.md")
+    if not os.path.exists(design_path):
+        return ["DESIGN.md does not exist (it is cited from source)"]
+    with open(design_path, encoding="utf-8") as f:
+        sections = set(HEADING_RE.findall(f.read()))
+    errors = []
+    for path in iter_source_files():
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for ref in REF_RE.findall(line):
+                if ref.rstrip(".") not in sections:
+                    rel = os.path.relpath(path, ROOT)
+                    errors.append(
+                        f"{rel}:{lineno}: DESIGN.md §{ref} — no such section"
+                        f" (have: {', '.join(sorted(sections))})"
+                    )
+    return errors
+
+
+def check_relative_links() -> list[str]:
+    errors = []
+    for name in DOC_FILES:
+        path = os.path.join(ROOT, name)
+        if not os.path.exists(path):
+            continue
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                target_path = os.path.normpath(
+                    os.path.join(ROOT, target.split("#", 1)[0])
+                )
+                if not os.path.exists(target_path):
+                    errors.append(f"{name}:{lineno}: dead link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = check_design_refs() + check_relative_links()
+    for err in errors:
+        print(f"check_docs: {err}", file=sys.stderr)
+    if errors:
+        print(f"check_docs: {len(errors)} failure(s)", file=sys.stderr)
+        return 1
+    print("check_docs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
