@@ -1,0 +1,70 @@
+"""Dynamic-network sweep: accuracy vs link-churn rate x sampling fraction.
+
+The paper's figures fix the topology for a whole run; its premise — routing
+adapts to link quality — only pays off when links CHANGE.  This benchmark
+sweeps the two dynamic axes the scenario engine grew for that question
+(DESIGN.md §8):
+
+  * link churn    — per-round Markov on/off link schedules
+                    (`topology.markov_link_schedule`, p_drop in CHURN_RATES,
+                    recovery fixed) over the Table-II network;
+  * client sampling — per-round uniform participation masks
+                    (`scenarios.sampling_schedule`, fraction in FRACTIONS).
+
+The full (churn x fraction x protocol) cross runs as ONE batched
+`run_grid` dispatch — time-varying topologies and masks are plain data, so
+the dynamic grid compiles and dispatches exactly like a static one;
+`REPRO_GRID_DEVICES=k` shards it over k devices (common.py).
+"""
+import time
+
+from benchmarks import common
+from repro.core import topology
+from repro.fl import scenarios
+
+CHURN_RATES = (0.0, 0.2, 0.5)        # Markov P(on -> off); P(off -> on) = 0.5
+FRACTIONS = (1.0, 0.5)               # sampled client fraction per round
+PROTOCOLS = (("ra", "ra_normalized"), ("aayg", "ra_normalized"))
+N_ROUNDS = 12
+N_CLIENTS = 10
+
+
+def build_grid() -> scenarios.ScenarioGrid:
+    net = common.standard_net(packet_len_bits=25_000,
+                              tx_power_dbm=common.HARSH_TX_DBM)
+    schedules = [
+        (f"churn{p_drop:g}",
+         topology.markov_link_schedule(net, N_ROUNDS, p_drop=p_drop,
+                                       p_recover=0.5, seed=11))
+        for p_drop in CHURN_RATES
+    ]
+    participation = [
+        (f"frac{frac:g}",
+         None if frac >= 1.0
+         else scenarios.sampling_schedule(N_CLIENTS, N_ROUNDS, frac, seed=13))
+        for frac in FRACTIONS
+    ]
+    return scenarios.ScenarioGrid.product(
+        schedules=schedules, protocols=PROTOCOLS,
+        participation=participation,
+    )
+
+
+def main() -> None:
+    grid = build_grid()
+    t0 = time.time()
+    res = common.run_standard_grid(grid, n_rounds=N_ROUNDS)
+    t_total = time.time() - t0
+    us = t_total * 1e6 / len(grid)
+    for label, one in res.items():
+        common.emit(f"fig_dynamic/{label}", us,
+                    f"final_acc={one.mean_acc[-1]:.3f}")
+    common.emit(
+        "fig_dynamic/timing", t_total * 1e6,
+        f"scenarios={len(grid)};one_dispatch_s={t_total:.2f};"
+        f"rounds={N_ROUNDS}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig8   — ||Lambda||^2 statistics + eq. 17 bound (paper Fig. 8)
   fig9   — routing-only relay nodes (paper Fig. 9)
   fig10  — aggregation-coefficient distributions (paper Fig. 10)
+  fig_dynamic — link-churn x client-sampling sweep (DESIGN.md §8)
   kernel — Pallas kernels vs references
   roofline — dry-run derived roofline table (DESIGN.md §Roofline)
 """
@@ -17,7 +18,8 @@ import sys
 import traceback
 
 MODULES = ["fig2_protocols", "fig3_sweep", "table3_overhead", "fig8_bias",
-           "fig9_relays", "fig10_coeffs", "kernel_bench", "roofline"]
+           "fig9_relays", "fig10_coeffs", "fig_dynamic", "kernel_bench",
+           "roofline"]
 
 
 def main() -> None:

@@ -15,6 +15,14 @@ e (N, N, L) with e[m, n, l] = 1 iff segment l of sender m reached receiver n
 error-free, and weights p (N,).  Outputs are per-receiver aggregated segments
 (N, L, K) — receiver-major, i.e. out[n] is client n's locally aggregated
 model.
+
+Client sampling (DESIGN.md §8): a participation mask s (N,) in {0, 1}
+composes with every mechanism through two helpers — `mask_senders` removes
+sampled-out senders from e (adaptive normalization then renormalizes over
+the sampled senders automatically; substitution redirects their mass to the
+receiver's own segments), and `keep_nonparticipants` restores sampled-out
+receivers' own segments after aggregation.  An all-ones mask is a bitwise
+no-op.
 """
 from __future__ import annotations
 
@@ -63,10 +71,45 @@ def substitution(w_seg: jnp.ndarray, p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndar
 
 
 def ideal(w_seg: jnp.ndarray, p: jnp.ndarray,
-          e: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Error-free global aggregate, broadcast to every receiver (eq. 8)."""
-    g = jnp.einsum("m,mlk->lk", p, w_seg)
-    return jnp.broadcast_to(g[None], w_seg.shape)
+          e: jnp.ndarray | None = None,
+          participation: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Error-free global aggregate, broadcast to every receiver (eq. 8).
+
+    With a ``participation`` mask s, the aggregate renormalizes over the
+    sampled clients (sum_m p_m s_m w_m / sum_m p_m s_m) and only sampled
+    receivers take it — everyone else keeps their own segments.
+    """
+    if participation is None:
+        g = jnp.einsum("m,mlk->lk", p, w_seg)
+        return jnp.broadcast_to(g[None], w_seg.shape)
+    n = w_seg.shape[0]
+    s = participation[:n]
+    w = p * s
+    g = jnp.einsum("m,mlk->lk", w, w_seg) / jnp.maximum(jnp.sum(w), _EPS)
+    return keep_nonparticipants(s, jnp.broadcast_to(g[None], w_seg.shape),
+                                w_seg)
+
+
+def mask_senders(e: jnp.ndarray, participation: jnp.ndarray) -> jnp.ndarray:
+    """Remove sampled-out SENDERS from a success mask (sampling eq.).
+
+    Zeroes e[m, :, :] for every client m with participation[m] == 0 while
+    keeping the own-model diagonal at 1 (a receiver always holds its own
+    segments, so normalization denominators stay >= p_n > 0).  An all-ones
+    mask returns ``e`` bitwise unchanged (`sample_success` already sets the
+    diagonal).
+    """
+    n = e.shape[0]
+    masked = e * participation[:n, None, None]
+    return jnp.maximum(masked, jnp.eye(n)[:, :, None])
+
+
+def keep_nonparticipants(participation: jnp.ndarray, aggregated: jnp.ndarray,
+                         w_seg: jnp.ndarray) -> jnp.ndarray:
+    """Sampled-out RECEIVERS keep their own segments untouched."""
+    n = w_seg.shape[0]
+    s = participation[:n].reshape((-1,) + (1,) * (w_seg.ndim - 1))
+    return jnp.where(s > 0, aggregated, w_seg)
 
 
 AGGREGATORS = {

@@ -63,12 +63,24 @@ def ra_round_seg(
     rho: jnp.ndarray,
     key: jax.Array,
     mode_id: jnp.ndarray,
+    participation: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """R&A local aggregation on segments; returns (out, e) with the sampled
-    (N, N, L) success mask exposed for bias/Λ diagnostics."""
+    (N, N, L) success mask exposed for bias/Λ diagnostics.
+
+    With a ``participation`` mask (N,), sampled-out senders are removed
+    from ``e`` (adaptive normalization renormalizes over the sampled
+    senders automatically) and sampled-out receivers keep their own
+    segments untouched.  ``participation=None`` keeps the exact static
+    trace.
+    """
     n = w_seg.shape[0]
     e = errors.sample_success(key, rho, w_seg.shape[1], n_clients=n)
-    return aggregation.apply_mode(mode_id, w_seg, p, e), e
+    if participation is None:
+        return aggregation.apply_mode(mode_id, w_seg, p, e), e
+    e = aggregation.mask_senders(e, participation)
+    out = aggregation.apply_mode(mode_id, w_seg, p, e)
+    return aggregation.keep_nonparticipants(participation, out, w_seg), e
 
 
 def aayg_round_seg(
@@ -79,12 +91,15 @@ def aayg_round_seg(
     mode_id: jnp.ndarray,
     *,
     n_mixes: int = 1,
+    participation: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Aggregate-as-You-Go gossip: J = n_mixes one-hop mix iterations.
 
     ``link_eps`` is the (V, V) one-hop packet success matrix (0 where not
     adjacent); only the leading N-client block participates (AaYG cannot
-    exploit routing-only relay nodes — Fig. 9 note).
+    exploit routing-only relay nodes — Fig. 9 note).  A ``participation``
+    mask silences sampled-out clients for the WHOLE round: they neither
+    broadcast nor update in any of the J mixes.
     """
     n, l, _ = w_seg.shape
     eps = link_eps[:n, :n]
@@ -92,8 +107,13 @@ def aayg_round_seg(
     def mix(w, key):
         u = jax.random.uniform(key, (n, n, l))
         e = (u < eps[:, :, None]).astype(jnp.float32)
+        if participation is not None:
+            e = e * participation[:n, None, None]
         e = jnp.maximum(e, jnp.eye(n)[:, :, None])  # own model always present
-        return aggregation.apply_mode(mode_id, w, p, e)
+        out = aggregation.apply_mode(mode_id, w, p, e)
+        if participation is not None:
+            out = aggregation.keep_nonparticipants(participation[:n], out, w)
+        return out
 
     keys = jax.random.split(key, n_mixes)
     return jax.lax.fori_loop(0, n_mixes, lambda j, w: mix(w, keys[j]), w_seg)
@@ -106,16 +126,28 @@ def cfl_round_seg(
     key: jax.Array,
     mode_id: jnp.ndarray,
     aggregator: jnp.ndarray,
+    participation: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """C-FL benchmark: star aggregation at `aggregator` via min-PER routes.
 
     Uplink: segment l of client m reaches the aggregator w.p. rho[m, a].
     Downlink: the global segment reaches client n w.p. rho[a, n]; on failure
     the client keeps its own local segment (paper's C-FL description).
+    With a ``participation`` mask, sampled-out clients neither upload nor
+    receive the downlink (they keep their own segments).  The star center
+    is infrastructure: C-FL cannot run a round without its aggregator, so
+    the aggregator's own mask entry is IGNORED (it always participates) —
+    this also keeps every per-segment normalization denominator >= p_agg,
+    so no receiver can be handed a zero model when all sampled uplinks
+    fail.
     """
     n, l, k = w_seg.shape
     kup, kdn = jax.random.split(key)
     aggregator = jnp.asarray(aggregator, jnp.int32)
+    if participation is not None:
+        participation = jnp.maximum(
+            participation[:n], jax.nn.one_hot(aggregator, n, dtype=jnp.float32)
+        )
 
     # Uplink success mask for each sender/segment, destination = aggregator.
     rho_up = jnp.take(rho[:n], aggregator, axis=1)            # (N,)
@@ -123,6 +155,8 @@ def cfl_round_seg(
         jnp.float32
     )
     e_up = e_up.at[aggregator].set(1.0)
+    if participation is not None:
+        e_up = e_up * participation[:, None]
     w_own = jnp.take(w_seg, aggregator, axis=0)               # (L, K)
 
     def _normalized(_):
@@ -143,12 +177,18 @@ def cfl_round_seg(
         jnp.float32
     )
     e_dn = e_dn.at[aggregator].set(1.0)
+    if participation is not None:
+        e_dn = e_dn * participation[:, None]
     return e_dn[:, :, None] * g[None] + (1.0 - e_dn)[:, :, None] * w_seg
 
 
-def ideal_round_seg(w_seg: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
-    """Error-free C-FL (the paper's ideal reference in Fig. 9)."""
-    return aggregation.ideal(w_seg, p)
+def ideal_round_seg(w_seg: jnp.ndarray, p: jnp.ndarray,
+                    participation: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Error-free C-FL (the paper's ideal reference in Fig. 9).
+
+    With a ``participation`` mask the global average renormalizes over the
+    sampled clients and only they receive it (`aggregation.ideal`)."""
+    return aggregation.ideal(w_seg, p, participation=participation)
 
 
 def dispatch_round_seg(
@@ -162,6 +202,7 @@ def dispatch_round_seg(
     aggregator: jnp.ndarray,
     *,
     n_mixes: int = 1,
+    participation: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One exchange round with a fully traced (protocol, mode, aggregator).
 
@@ -169,26 +210,38 @@ def dispatch_round_seg(
     mask for R&A (all-ones for other protocols) and ``bias`` is the mean
     ||Lambda_l||_F^2 diagnostic (NaN where undefined, 0 for ideal C-FL) —
     matching the scalar simulator's per-protocol bookkeeping.
+
+    ``participation`` (optional (N,) client sampling mask) threads through
+    every branch: sampled-out clients contribute to no aggregation and keep
+    their segments untouched (for R&A the bias diagnostic is computed from
+    the participation-masked ``e`` — the realized coefficients).  One
+    carve-out: C-FL's star center always participates (see
+    `cfl_round_seg`).  None (the default) keeps the exact static trace.
     """
     n, l, _ = w_seg.shape
     e_ones = jnp.ones((n, n, l), jnp.float32)
     nan = jnp.asarray(jnp.nan, jnp.float32)
 
     def b_ra(_):
-        out, e = ra_round_seg(w_seg, p, rho, key, mode_id)
+        out, e = ra_round_seg(w_seg, p, rho, key, mode_id, participation)
         return out, e, jnp.mean(aggregation.bias_sq_norm(p, e))
 
     def b_aayg(_):
-        out = aayg_round_seg(w_seg, p, link_eps, key, mode_id, n_mixes=n_mixes)
+        out = aayg_round_seg(w_seg, p, link_eps, key, mode_id, n_mixes=n_mixes,
+                             participation=participation)
         return out, e_ones, nan
 
     def b_cfl(_):
-        return cfl_round_seg(w_seg, p, rho, key, mode_id, aggregator), e_ones, nan
+        out = cfl_round_seg(w_seg, p, rho, key, mode_id, aggregator,
+                            participation)
+        return out, e_ones, nan
 
     def b_ideal(_):
-        return ideal_round_seg(w_seg, p), e_ones, jnp.asarray(0.0, jnp.float32)
+        out = ideal_round_seg(w_seg, p, participation)
+        return out, e_ones, jnp.asarray(0.0, jnp.float32)
 
     def b_none(_):
+        # "none" never exchanges; non-participants are untouched trivially.
         return w_seg, e_ones, nan
 
     return jax.lax.switch(

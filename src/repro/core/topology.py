@@ -54,12 +54,20 @@ class Network:
                   0 where not adjacent.
       n_clients:  first `n_clients` nodes participate in FL; the rest are
                   routing-only relays (Fig. 9 scenario).
+      packet_len_bits: the packet length the PER model was evaluated at
+                  (None for hand-built networks) — lets the simulator
+                  validate it against the codec's 32*seg_len-bit segments
+                  (`simulator.check_packet_consistency`).
+      tx_power_dbm: the TX power the PER model was evaluated at (None for
+                  hand-built networks) — reused by `fading_per_schedule`.
     """
 
     coords: jnp.ndarray
     adjacency: jnp.ndarray
     link_eps: jnp.ndarray
     n_clients: int
+    packet_len_bits: int | None = None
+    tx_power_dbm: float | None = None
 
     @property
     def n_nodes(self) -> int:
@@ -183,6 +191,8 @@ def make_network(
         adjacency=jnp.asarray(adj),
         link_eps=eps,
         n_clients=n_clients,
+        packet_len_bits=packet_len_bits,
+        tx_power_dbm=tx_power_dbm,
     )
 
 
@@ -242,3 +252,108 @@ def random_geometric_network(
         n_clients=n_clients,
         seed=seed,
     )
+
+
+# ---------------------------------------------------------------------------
+# Time-varying topology schedules (DESIGN.md §8).
+#
+# Both builders return a host-side (T, V, V) float32 link_eps stack — the
+# `Scenario.link_eps` time axis — so per-round channel variation is plain
+# data: no recompilation, one grid program serves static and dynamic
+# scenarios alike.  Round t of the simulator uses entry t % T.
+# ---------------------------------------------------------------------------
+def markov_link_schedule(
+    net: Network,
+    n_rounds: int,
+    *,
+    p_drop: float,
+    p_recover: float = 0.5,
+    seed: int = 0,
+) -> np.ndarray:
+    """Per-round link on/off churn: a 2-state Markov chain per edge.
+
+    Every undirected edge of ``net`` independently alternates between ON
+    (its static `link_eps` quality) and OFF (eps = 0, the link disappears
+    and routing must go around it):
+
+      P(on -> off) = p_drop        P(off -> on) = p_recover
+
+    All edges start ON, so ``p_drop=0`` reproduces the static network in
+    every round (a T=n_rounds stack of `net.link_eps`) and the schedule's
+    first entry always equals the static matrix.  Deterministic in
+    ``seed``.
+
+    Returns: (n_rounds, V, V) float32 link success stack.
+    """
+    if not 0.0 <= p_drop <= 1.0 or not 0.0 <= p_recover <= 1.0:
+        raise ValueError(
+            f"p_drop/p_recover must be probabilities, got {p_drop}/{p_recover}"
+        )
+    rng = np.random.default_rng(seed)
+    base = np.asarray(net.link_eps, np.float32)
+    adj = np.asarray(net.adjacency)
+    v = base.shape[0]
+    iu = np.triu_indices(v, k=1)
+    on = np.ones(len(iu[0]), dtype=bool)
+
+    out = np.empty((n_rounds, v, v), np.float32)
+    for t in range(n_rounds):
+        if t > 0:
+            u = rng.random(len(on))
+            on = np.where(on, u >= p_drop, u < p_recover)
+        gate = np.zeros((v, v), np.float32)
+        gate[iu] = on.astype(np.float32)
+        gate += gate.T                      # symmetric; diagonal stays 0
+        out[t] = base * gate * adj
+    return out
+
+
+def fading_per_schedule(
+    net: Network,
+    n_rounds: int,
+    *,
+    shadow_sigma_db: float = 6.0,
+    seed: int = 0,
+    packet_len_bits: int | None = None,
+    tx_power_dbm: float | None = None,
+) -> np.ndarray:
+    """Per-round PER variation from log-normal shadow fading.
+
+    Each round draws an i.i.d. symmetric per-link shadowing term
+    X ~ N(0, shadow_sigma_db^2) dB on the received power and re-evaluates
+    the SNR -> BER -> packet-success chain, so link qualities fluctuate
+    round to round while the topology (adjacency) stays fixed.
+    ``shadow_sigma_db=0`` matches the network's static PER matrix every
+    round (up to float32 rounding — this builder accumulates in float64).
+    ``packet_len_bits`` / ``tx_power_dbm`` default to the values the
+    network was built with.  Deterministic in ``seed``.
+
+    Returns: (n_rounds, V, V) float32 link success stack.
+    """
+    if packet_len_bits is None:
+        packet_len_bits = net.packet_len_bits or 25_000
+    if tx_power_dbm is None:
+        tx_power_dbm = (net.tx_power_dbm if net.tx_power_dbm is not None
+                        else TX_POWER_DBM)
+    rng = np.random.default_rng(seed)
+    coords = np.asarray(net.coords)
+    adj = np.asarray(net.adjacency, np.float32)
+    v = coords.shape[0]
+    diff = coords[:, None, :] - coords[None, :, :]
+    dist = np.sqrt((diff ** 2).sum(-1))
+    iu = np.triu_indices(v, k=1)
+
+    # (T, V, V) symmetric shadowing draws (dB), zero diagonal.
+    shadow = np.zeros((n_rounds, v, v))
+    draws = rng.normal(0.0, shadow_sigma_db, size=(n_rounds, len(iu[0])))
+    shadow[:, iu[0], iu[1]] = draws
+    shadow += np.transpose(shadow, (0, 2, 1))
+
+    noise_dbm = NOISE_PSD_DBM_HZ + 10.0 * np.log10(BANDWIDTH_HZ)
+    rx_dbm = tx_power_dbm - np.asarray(pathloss_db(jnp.asarray(dist)))
+    snr = 10.0 ** ((rx_dbm[None] + shadow - noise_dbm) / 10.0)
+    eps_bit = np.asarray(bit_success_rate(jnp.asarray(snr)))
+    eps_bit = np.clip(eps_bit, 1e-300, 1.0)
+    eps = np.exp(packet_len_bits * np.log(eps_bit))
+    eps = eps * adj[None] * (1.0 - np.eye(v, dtype=np.float32))[None]
+    return eps.astype(np.float32)

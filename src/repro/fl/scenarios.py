@@ -21,6 +21,24 @@ Scenario axes:
   * aggregation     — ra_normalized | substitution (traced id),
   * learning rate   — traced scalar.
 
+Dynamic axes (DESIGN.md §8) — a scenario can be a *trajectory* of grid
+points, still batched through the same single dispatch:
+
+  * topology schedule — ``schedules=[(label, (T, V, V) link_eps stack)]``
+                      (see `topology.markov_link_schedule` /
+                      `topology.fading_per_schedule`); round t uses entry
+                      t % T, re-routed via vmapped Floyd–Warshall once per
+                      scenario, outside the round scan,
+  * client sampling — ``participation=[(label, (T, N) or (N,) mask)]``
+                      (see `sampling_schedule`); sampled-out clients skip
+                      local training and contribute nothing to aggregation,
+  * local epochs    — ``local_epochs=(N,)`` per-client vector (heterogeneous
+                      compute, masked scan over the static bound).
+
+Grid leaves are kept HOST-SIDE (numpy): the per-dispatch uniform-field
+hoisting test then costs no device sync, and arrays only move to devices
+at dispatch.
+
 Multi-device grids (DESIGN.md §7): pass ``devices=`` to `run_grid` /
 `GridRunner` and the grid axis is sharded over a 1-D ``('grid',)`` mesh
 (`repro.launch.mesh.grid_mesh`) via `shard_map` — each device executes the
@@ -41,7 +59,11 @@ measures scenarios/sec vs device count through the sharded path.
 Public API
 ----------
   ScenarioGrid.product(...)       build a cross-product grid
-  ScenarioGrid.concat(*grids)     join heterogeneous grids (re-pads V)
+                                  (+ schedules= / participation= /
+                                  local_epochs= dynamic axes)
+  ScenarioGrid.concat(*grids)     join heterogeneous grids (re-pads V and
+                                  the time axis, recomputes rho)
+  sampling_schedule(...)          (T, N) per-round client-sampling mask
   run_grid(..., devices=None)     one-shot batched (optionally sharded) run
   run_sequential(...)             per-scenario-dispatch baseline
   GridRunner(..., devices=None)   warm-program server for repeated grids
@@ -52,6 +74,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import itertools
+from collections import Counter
 from typing import Any, Callable, Iterable, Sequence
 
 import jax
@@ -89,15 +112,35 @@ PROTOCOL_IDS = protocols.PROTOCOL_IDS
 MODE_IDS = protocols.MODE_IDS
 
 
-def _pad_link_eps(link_eps: jnp.ndarray, v_max: int) -> jnp.ndarray:
-    """Pad a (V, V) link matrix to (v_max, v_max) with isolated nodes.
+def _pad_link_eps(link_eps, v_max: int) -> np.ndarray:
+    """Pad a (..., V, V) link matrix/stack to V=v_max with isolated nodes.
 
     Padded nodes have zero link quality in/out, so Floyd–Warshall leaves
     every real route untouched and the client block of rho is unchanged.
+    Host-side (numpy); handles an optional leading time axis.
     """
-    v = link_eps.shape[0]
-    return jnp.pad(jnp.asarray(link_eps, jnp.float32),
-                   ((0, v_max - v), (0, v_max - v)))
+    arr = np.asarray(link_eps, np.float32)
+    v = arr.shape[-1]
+    pad = [(0, 0)] * (arr.ndim - 2) + [(0, v_max - v), (0, v_max - v)]
+    return np.pad(arr, pad)
+
+
+def _tile_schedule(arr: np.ndarray, t_target: int, what: str) -> np.ndarray:
+    """Cyclically tile a (T, ...) schedule to ``t_target`` entries.
+
+    Round t reads entry t % T, so tiling to a MULTIPLE of T is semantically
+    exact; any other target would silently change the trajectory, so it
+    raises instead.
+    """
+    t = arr.shape[0]
+    if t == t_target:
+        return arr
+    if t_target % t:
+        raise ValueError(
+            f"cannot align {what} of length {t} to a common time axis of "
+            f"{t_target} rounds: {t_target} is not a multiple of {t}"
+        )
+    return np.tile(arr, (t_target // t,) + (1,) * (arr.ndim - 1))
 
 
 def _pad_scenario_batch(batch: simulator.Scenario,
@@ -109,7 +152,9 @@ def _pad_scenario_batch(batch: simulator.Scenario,
     (protocol, mode)-homogeneous group stays homogeneous and the hoisted
     scalar dispatch survives padding) while ``link_eps`` is all-zero —
     every node isolated, every segment falls back to the sender's own.
+    Dynamic fields (participation / local_epochs) copy row 0 like scalars.
     Filler results are dropped on unpad; they never reach a `GridResult`.
+    Host-side (numpy), so padding costs no device sync.
     """
     g = batch.link_eps.shape[0]
     if g_target < g:
@@ -121,15 +166,35 @@ def _pad_scenario_batch(batch: simulator.Scenario,
     def pad_leaf(name: str, leaf):
         if leaf is None:
             return None
-        filler = jnp.broadcast_to(leaf[:1], (n_pad,) + leaf.shape[1:])
+        arr = np.asarray(leaf)
+        filler = np.broadcast_to(arr[:1], (n_pad,) + arr.shape[1:])
         if name == "link_eps":
-            filler = jnp.zeros_like(filler)
-        return jnp.concatenate([leaf, filler])
+            filler = np.zeros_like(filler)
+        return np.concatenate([arr, filler])
 
     return simulator.Scenario(
         **{name: pad_leaf(name, leaf)
            for name, leaf in batch._asdict().items()}
     )
+
+
+def sampling_schedule(n_clients: int, n_rounds: int, fraction: float, *,
+                      seed: int = 0) -> np.ndarray:
+    """A (T, N) client-sampling mask: per round, a uniform random subset.
+
+    Each round independently samples ``ceil(fraction * n_clients)`` clients
+    without replacement (at least one).  ``fraction=1`` yields the all-ones
+    mask (bitwise equivalent to full participation).  Deterministic in
+    ``seed``.
+    """
+    if not 0.0 < fraction <= 1.0:
+        raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+    k = min(n_clients, max(1, int(np.ceil(fraction * n_clients))))
+    rng = np.random.default_rng(seed)
+    out = np.zeros((n_rounds, n_clients), np.float32)
+    for t in range(n_rounds):
+        out[t, rng.choice(n_clients, size=k, replace=False)] = 1.0
+    return out
 
 
 def _resolve_grid_mesh(devices: DeviceSpec,
@@ -156,12 +221,66 @@ def _resolve_grid_mesh(devices: DeviceSpec,
     return launch_mesh.grid_mesh(devices)
 
 
+def _dedupe_labels(labels: list[str]) -> list[str]:
+    """Disambiguate colliding labels deterministically (``label#k``).
+
+    `ScenarioGrid.product` omits single-valued axes from labels, so e.g.
+    concatenating two single-seed grids of the same networks yields
+    colliding labels — and `GridResult.result(label)` would silently
+    return the first.  Every member of a colliding set gets an occurrence
+    suffix; unique labels pass through untouched.
+    """
+    counts = Counter(labels)
+    if max(counts.values(), default=0) <= 1:
+        return labels
+    seen: dict[str, int] = {}
+    out = []
+    for lbl in labels:
+        if counts[lbl] > 1:
+            k = seen.get(lbl, 0)
+            seen[lbl] = k + 1
+            out.append(f"{lbl}#{k}")
+        else:
+            out.append(lbl)
+    return out
+
+
+def _normalize_participation(leaf, n_ref: int, t_target: int) -> np.ndarray:
+    """Batch-leaf participation -> (G, T, N) float32, cyclically tiled."""
+    arr = np.asarray(leaf, np.float32)
+    if arr.ndim == 2:                       # (G, N) static mask per row
+        arr = arr[:, None, :]
+    if arr.ndim != 3 or arr.shape[-1] != n_ref:
+        raise ValueError(
+            f"participation leaves must be (G, N={n_ref}) or (G, T, N), "
+            f"got shape {arr.shape}"
+        )
+    if arr.shape[1] != t_target:
+        if t_target % arr.shape[1]:
+            raise ValueError(
+                f"cannot align participation schedule of length "
+                f"{arr.shape[1]} to {t_target} (not a multiple)"
+            )
+        arr = np.tile(arr, (1, t_target // arr.shape[1], 1))
+    return arr
+
+
 @dataclasses.dataclass
 class ScenarioGrid:
-    """A flat batch of scenarios: every Scenario leaf stacked on axis 0."""
+    """A flat batch of scenarios: every Scenario leaf stacked on axis 0.
+
+    Leaves are host-side numpy arrays (`product` / `concat` build them that
+    way): grouping, padding, and uniform-field hoisting then never sync a
+    device, and data moves to devices exactly once per dispatch.
+
+    ``packet_len_bits`` records the distinct PER packet lengths of the
+    source networks (where known): `GridRunner.run` validates them against
+    the codec's segment size (`simulator.check_packet_len`).
+    """
 
     scenarios: simulator.Scenario   # leaves with leading G axis
     labels: list[str]
+    packet_len_bits: tuple[int, ...] = ()
 
     def __len__(self) -> int:
         return len(self.labels)
@@ -174,63 +293,228 @@ class ScenarioGrid:
     def concat(*grids: "ScenarioGrid") -> "ScenarioGrid":
         """Join grids into one batch, re-padding link matrices to a common V
         (heterogeneous sub-grids — e.g. a relay sweep plus its ideal
-        reference — still compile to a single program)."""
-        v_max = max(g.scenarios.link_eps.shape[-1] for g in grids)
+        reference — still compile to a single program).
 
-        def repad(g: ScenarioGrid) -> simulator.Scenario:
-            v = g.scenarios.link_eps.shape[-1]
-            return g.scenarios._replace(
-                link_eps=jnp.pad(g.scenarios.link_eps,
-                                 ((0, 0), (0, v_max - v), (0, v_max - v)))
+        Static and dynamic grids mix freely: static link matrices are
+        promoted to T=1 schedules and cyclically tiled to the longest time
+        axis (which must be a multiple of every grid's T); missing
+        participation masks are filled with all-ones.  Grids must agree on
+        having (or not having) per-client ``local_epochs`` — there is no
+        neutral fill-in for "use the config default".  Any derived ``rho``
+        is DROPPED and recomputed lazily at `prepare` time: a stale rho
+        carried through V-repadding would be inconsistent with the padded
+        ``link_eps``.  Colliding labels are disambiguated with an
+        occurrence suffix (see `_dedupe_labels`).
+        """
+        v_max = max(g.scenarios.link_eps.shape[-1] for g in grids)
+        ranks = {np.ndim(g.scenarios.link_eps) for g in grids}
+        dynamic_t = 4 in ranks              # (G, T, V, V) present
+        t_max = max(
+            (g.scenarios.link_eps.shape[1] for g in grids
+             if np.ndim(g.scenarios.link_eps) == 4),
+            default=1,
+        )
+        has_part = [g.scenarios.participation is not None for g in grids]
+        has_epochs = [g.scenarios.local_epochs is not None for g in grids]
+        if any(has_epochs) and not all(has_epochs):
+            raise ValueError(
+                "cannot concat grids with and without per-client "
+                "local_epochs: pass an explicit vector to every grid "
+                "(there is no neutral stand-in for the static config value)"
+            )
+        part_n = None
+        if any(has_part):
+            ns = {g.scenarios.participation.shape[-1]
+                  for g in grids if g.scenarios.participation is not None}
+            if len(ns) != 1:
+                raise ValueError(f"participation client counts differ: {ns}")
+            (part_n,) = ns
+            t_part = max(
+                (g.scenarios.participation.shape[1] for g in grids
+                 if g.scenarios.participation is not None
+                 and np.ndim(g.scenarios.participation) == 3),
+                default=1,
             )
 
+        def normalize(g: ScenarioGrid) -> simulator.Scenario:
+            s = g.scenarios
+            le = np.asarray(s.link_eps, np.float32)
+            if dynamic_t:
+                if le.ndim == 3:
+                    le = le[:, None]                    # (G, 1, V, V)
+                # Tile along the time axis (leading G axis untouched).
+                if le.shape[1] != t_max:
+                    if t_max % le.shape[1]:
+                        raise ValueError(
+                            f"cannot align topology schedule of length "
+                            f"{le.shape[1]} to {t_max} (not a multiple)"
+                        )
+                    le = np.tile(le, (1, t_max // le.shape[1], 1, 1))
+            le = _pad_link_eps(le, v_max)
+            part = s.participation
+            if part_n is not None:
+                if part is None:
+                    part = np.ones((len(g), 1, part_n), np.float32)
+                part = _normalize_participation(part, part_n, t_part)
+            return s._replace(link_eps=le, rho=None, participation=part)
+
         stacked = jax.tree.map(
-            lambda *leaves: jnp.concatenate(leaves), *(repad(g) for g in grids)
+            lambda *leaves: np.concatenate([np.asarray(l) for l in leaves]),
+            *(normalize(g) for g in grids)
         )
-        labels = [lbl for g in grids for lbl in g.labels]
-        return ScenarioGrid(scenarios=stacked, labels=labels)
+        labels = _dedupe_labels([lbl for g in grids for lbl in g.labels])
+        pkt = tuple(sorted({b for g in grids for b in g.packet_len_bits}))
+        return ScenarioGrid(scenarios=stacked, labels=labels,
+                            packet_len_bits=pkt)
 
     @staticmethod
     def product(
         *,
-        networks: Sequence[tuple[str, topology.Network]],
+        networks: Sequence[tuple[str, topology.Network]] = (),
+        schedules: Sequence[tuple[str, Any]] = (),
         protocols: Sequence[tuple[str, str]] = (("ra", "ra_normalized"),),
         seeds: Iterable[int] = (0,),
         lrs: Iterable[float] = (0.05,),
+        participation: Sequence[tuple[str, Any]] | None = None,
+        local_epochs: Any = None,
         aggregator: int = 6,
     ) -> "ScenarioGrid":
-        """Cross networks x (protocol, mode) x seeds x lrs into one grid.
+        """Cross topology x (protocol, mode) x seeds x lrs [x participation]
+        into one grid.
 
         Args:
-          networks: (label, Network) pairs — one per topology/PER point.
+          networks: (label, Network) pairs — one per STATIC topology/PER
+            point.
+          schedules: (label, schedule) pairs — one per TIME-VARYING
+            topology point; a schedule is a (T, V, V) link_eps stack
+            (`topology.markov_link_schedule` / `fading_per_schedule`), a
+            sequence of Networks, or a single Network (T=1).  When any
+            schedule is present, every topology point (static ones
+            included) is promoted to the common time axis: schedules are
+            cyclically tiled to the longest T, which must be a multiple of
+            each (round t uses entry t % T, so tiling is exact).
           protocols: (protocol, mode) string pairs (PROTOCOL_IDS / MODE_IDS).
           seeds: model-init + channel seeds.
           lrs: local GD step sizes.
+          participation: optional axis of (label, mask) pairs; a mask is
+            (N,), (T, N) (see `sampling_schedule`), or None for full
+            participation (normalized to an all-ones mask so the batch
+            stays structurally uniform).
+          local_epochs: optional (N,) per-client epoch vector shared by
+            every grid point (values clip to the SimConfig bound).
           aggregator: C-FL star center (shared; only read by cfl scenarios).
+
+        Raises ValueError on duplicate labels (e.g. repeated axis labels):
+        `GridResult.result(label)` must never be ambiguous.
         """
         seeds = list(seeds)
         lrs = list(lrs)
-        v_max = max(net.link_eps.shape[0] for _, net in networks)
+        if not networks and not schedules:
+            raise ValueError("need at least one network or schedule")
+
+        def schedule_links(sched) -> np.ndarray:
+            if isinstance(sched, topology.Network):
+                return np.asarray(sched.link_eps, np.float32)[None]
+            if isinstance(sched, (list, tuple)):
+                return np.stack(
+                    [np.asarray(s.link_eps, np.float32) for s in sched]
+                )
+            arr = np.asarray(sched, np.float32)
+            if arr.ndim == 2:
+                arr = arr[None]
+            if arr.ndim != 3 or arr.shape[-1] != arr.shape[-2]:
+                raise ValueError(
+                    f"schedule must be (T, V, V), got shape {arr.shape}"
+                )
+            return arr
+
+        # The topology axis: static nets (rank 2) + schedules (rank 3).
+        topo_axis: list[tuple[str, np.ndarray]] = [
+            (lbl, np.asarray(net.link_eps, np.float32))
+            for lbl, net in networks
+        ] + [(lbl, schedule_links(sched)) for lbl, sched in schedules]
+        pkt_bits = {net.packet_len_bits for _, net in networks
+                    if net.packet_len_bits is not None}
+        for _, sched in schedules:
+            nets = ([sched] if isinstance(sched, topology.Network)
+                    else sched if isinstance(sched, (list, tuple)) else ())
+            pkt_bits |= {s.packet_len_bits for s in nets
+                         if isinstance(s, topology.Network)
+                         and s.packet_len_bits is not None}
+        v_max = max(links.shape[-1] for _, links in topo_axis)
+        if schedules:
+            t_max = max(links.shape[0] for _, links in topo_axis
+                        if links.ndim == 3)
+            topo_axis = [
+                (lbl,
+                 _tile_schedule(links if links.ndim == 3 else links[None],
+                                t_max, f"topology schedule {lbl!r}"))
+                for lbl, links in topo_axis
+            ]
+        topo_axis = [(lbl, _pad_link_eps(links, v_max))
+                     for lbl, links in topo_axis]
+
+        # The participation axis (None -> single full-participation point).
+        if participation is not None:
+            masks = [np.asarray(m, np.float32) for _, m in participation
+                     if m is not None]
+            if not masks:
+                raise ValueError(
+                    "participation axis needs at least one non-None mask"
+                )
+            n_ref = masks[0].shape[-1]
+            t_part = 1
+            for m in masks:
+                if m.ndim == 2:
+                    t_part = max(t_part, m.shape[0])
+            part_axis = []
+            for lbl, m in participation:
+                if m is None:
+                    m = np.ones((1, n_ref), np.float32)
+                m = np.asarray(m, np.float32)
+                if m.ndim == 1:
+                    m = m[None]
+                part_axis.append(
+                    (lbl, _normalize_participation(m[None], n_ref,
+                                                   t_part)[0])
+                )
+        else:
+            part_axis = [(None, None)]
+
+        epochs_vec = (None if local_epochs is None
+                      else np.asarray(local_epochs, np.int32))
+
         rows, labels = [], []
-        for (net_label, net), (proto, mode), seed, lr in itertools.product(
-            networks, protocols, seeds, lrs
-        ):
+        for (net_label, links), (proto, mode), seed, lr, (part_label, mask) \
+                in itertools.product(topo_axis, protocols, seeds, lrs,
+                                     part_axis):
             rows.append(simulator.Scenario(
-                link_eps=_pad_link_eps(net.link_eps, v_max),
-                seed=jnp.asarray(seed, jnp.int32),
-                protocol_id=jnp.asarray(PROTOCOL_IDS[proto], jnp.int32),
-                mode_id=jnp.asarray(MODE_IDS[mode], jnp.int32),
-                aggregator=jnp.asarray(aggregator, jnp.int32),
-                lr=jnp.asarray(lr, jnp.float32),
+                link_eps=links,
+                seed=np.asarray(seed, np.int32),
+                protocol_id=np.asarray(PROTOCOL_IDS[proto], np.int32),
+                mode_id=np.asarray(MODE_IDS[mode], np.int32),
+                aggregator=np.asarray(aggregator, np.int32),
+                lr=np.asarray(lr, np.float32),
+                participation=mask,
+                local_epochs=epochs_vec,
             ))
             parts = [net_label, f"{proto}+{mode}"]
             if len(seeds) > 1:
                 parts.append(f"s{seed}")
             if len(lrs) > 1:
                 parts.append(f"lr{lr:g}")
+            if part_label is not None and len(part_axis) > 1:
+                parts.append(part_label)
             labels.append("/".join(parts))
-        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *rows)
-        return ScenarioGrid(scenarios=stacked, labels=labels)
+        if len(set(labels)) != len(labels):
+            dups = [l for l, c in Counter(labels).items() if c > 1]
+            raise ValueError(
+                f"duplicate scenario labels {dups}: give each axis point a "
+                "distinct label"
+            )
+        stacked = jax.tree.map(lambda *leaves: np.stack(leaves), *rows)
+        return ScenarioGrid(scenarios=stacked, labels=labels,
+                            packet_len_bits=tuple(sorted(pkt_bits)))
 
 
 @dataclasses.dataclass
@@ -251,8 +535,26 @@ class GridResult:
         return self.acc.mean(axis=2)
 
     def result(self, key: int | str) -> simulator.SimResult:
-        """One scenario's trajectory as a scalar SimResult."""
-        i = self.labels.index(key) if isinstance(key, str) else key
+        """One scenario's trajectory as a scalar SimResult.
+
+        String keys must match exactly one label: a missing label raises
+        KeyError, and so does an ambiguous one (duplicate labels can only
+        enter through a hand-built grid — `ScenarioGrid.product` rejects
+        them and `.concat` disambiguates — but silently returning the
+        first match would hide the collision).
+        """
+        if isinstance(key, str):
+            hits = [i for i, lbl in enumerate(self.labels) if lbl == key]
+            if not hits:
+                raise KeyError(f"no scenario labeled {key!r}")
+            if len(hits) > 1:
+                raise KeyError(
+                    f"label {key!r} is ambiguous: {len(hits)} scenarios "
+                    "carry it (index by position instead)"
+                )
+            i = hits[0]
+        else:
+            i = key
         return simulator.SimResult(
             acc_per_client=self.acc[i],
             loss_per_client=self.loss[i],
@@ -272,6 +574,21 @@ def _metrics_to_grid_result(metrics: dict, labels: list[str]) -> GridResult:
     )
 
 
+def _batch_uniform(arr: np.ndarray) -> bool:
+    """True if every batch row equals row 0 — NaN-tolerantly.
+
+    A plain ``(arr == arr[:1]).all()`` is False for ANY field containing
+    NaN (NaN != NaN), which would silently leave a grid-uniform field
+    batched — and a batched protocol/mode selector forces every lax.switch
+    branch to execute for every scenario.  Float fields therefore compare
+    with ``equal_nan`` (NaN placed equally in every row counts as uniform).
+    """
+    first = np.broadcast_to(arr[:1], arr.shape)
+    if arr.dtype.kind in "fc":
+        return bool(np.array_equal(arr, first, equal_nan=True))
+    return bool(np.array_equal(arr, first))
+
+
 def _hoist_uniform(batch: simulator.Scenario):
     """Split a scenario batch into (in_axes, args): leaves constant across
     the batch are hoisted out of the vmap (in_axes=None) so scalar control
@@ -279,6 +596,8 @@ def _hoist_uniform(batch: simulator.Scenario):
     otherwise force EVERY protocol branch to execute for every scenario.
 
     `seed` always stays mapped so vmap has at least one mapped axis.
+    Grid leaves live host-side (numpy — see `ScenarioGrid`), so the
+    uniformity test is pure host work: no per-call device sync.
     """
     axes, args = {}, {}
     for name, leaf in batch._asdict().items():
@@ -286,7 +605,7 @@ def _hoist_uniform(batch: simulator.Scenario):
             axes[name], args[name] = None, None
             continue
         arr = np.asarray(leaf)
-        if name != "seed" and (arr == arr[:1]).all():
+        if name != "seed" and _batch_uniform(arr):
             axes[name], args[name] = None, jnp.asarray(arr[0])
         else:
             axes[name], args[name] = 0, leaf
@@ -331,6 +650,7 @@ class GridRunner:
             n_rounds=cfg.n_rounds, aayg_mixes=cfg.aayg_mixes,
         )
         self.devices = devices
+        self._seg_len = cfg.seg_len
         self._jitted: dict[tuple, Callable] = {}  # (in_axes, mesh) -> jit
         self._scalar = jax.jit(self.sim.run_scenario)
 
@@ -361,6 +681,10 @@ class GridRunner:
         mesh = _resolve_grid_mesh(
             self.devices if devices is _INHERIT else devices, sharding
         )
+        # Surface PER-packet vs codec-segment mismatches on the grid path
+        # too (one-time warning; see simulator.check_packet_len).
+        for bits in getattr(grid, "packet_len_bits", ()):
+            simulator.check_packet_len(bits, self._seg_len)
         g = len(grid)
         if group_by_protocol:
             pid = np.asarray(grid.scenarios.protocol_id)

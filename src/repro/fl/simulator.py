@@ -13,6 +13,23 @@ arbitrary scenario — and `repro.fl.scenarios.run_grid` can `jax.vmap` the
 whole training loop across a scenario grid in a single XLA dispatch (and,
 with ``devices=``, shard that grid across a device mesh; DESIGN.md §7).
 
+Dynamic scenarios (DESIGN.md §8): a `Scenario` may also be a *trajectory*
+of grid points —
+
+  * ``link_eps`` with a leading time axis ``(T, V, V)`` (round t uses
+    entry ``t % T``; `prepare` derives the matching ``(T, V, V)`` rho
+    stack once, outside the round scan),
+  * a ``participation`` mask ``(N,)`` or ``(T, N)`` (client sampling:
+    masked-out clients skip local training, contribute nothing to any
+    aggregation, and keep their parameters untouched),
+  * a per-client ``local_epochs`` vector ``(N,)`` (heterogeneous compute;
+    the static ``SimConfig.local_epochs`` is the compiled scan bound and
+    per-client values are clipped to it).
+
+All three default to the static behavior (None / rank-2 ``link_eps``), in
+which case `run_scenario` traces the EXACT pre-dynamic program — static
+scenarios stay bit-identical.
+
 The simulator is model-agnostic: pass any (init, apply) pair from
 `repro.models.smallnets` (or a closure).
 
@@ -20,6 +37,7 @@ Public API
 ----------
   SimConfig                 static + default per-scenario knobs
   Scenario / make_scenario  one grid point, all fields traced arrays
+  Scenario.at_round(t)      per-round view of a dynamic scenario
   build_sim(...)            bind (init, apply, data, statics) -> SimPrograms
   SimPrograms.round_step    (state, rng, scenario) -> (state, metrics)
   SimPrograms.run_scenario  scenario -> metrics dict (scanned n_rounds)
@@ -33,17 +51,22 @@ jit/vmap/shard_map-safe by construction (see tests/test_scenarios.py).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protocols, routing, topology
+from repro.core import errors, protocols, routing, topology
 from repro.data.synthetic import FederatedDataset
 from repro.models.smallnets import accuracy, ce_loss
 
 Pytree = Any
+
+
+class PacketLengthMismatchWarning(UserWarning):
+    """The codec's segment size and the network's PER packet length differ."""
 
 
 @dataclasses.dataclass
@@ -58,49 +81,168 @@ class SimConfig:
 
     protocol: str = "ra"          # ra | aayg | cfl | ideal_cfl | none
     mode: str = "ra_normalized"   # ra_normalized | substitution
-    seg_len: int = 1024           # K values per packet (packet = 32K bits)
-    local_epochs: int = 5         # I
+    seg_len: int = 1024           # K float32 values per segment (32*K bits)
+    local_epochs: int = 5         # I (scan bound for per-client vectors)
     lr: float = 0.05
     n_rounds: int = 50
     aayg_mixes: int = 1           # J
     cfl_aggregator: int = 6       # paper: node 7 (index 6)
     seed: int = 0
 
+    @property
+    def packet_len_bits(self) -> int:
+        """Bits per transmitted packet implied by ``seg_len`` (32 * K).
+
+        NOTE the paper's experimental defaults are internally inconsistent:
+        its PER model uses 25,000-bit packets (`topology.paper_network`)
+        while a 1024-float32 segment is 32,768 bits — 25,000 is not even a
+        multiple of 32.  We keep both paper defaults and surface the
+        mismatch via `check_packet_consistency` (a one-time warning) rather
+        than silently rescaling either; pass
+        ``packet_len_bits=cfg.packet_len_bits`` to the network builders for
+        a self-consistent channel.
+        """
+        return errors.packet_len_bits(self.seg_len)
+
 
 class Scenario(NamedTuple):
-    """One grid point, every field a traced array (vmap-able pytree).
+    """One grid point (or a trajectory of them), every field a traced array.
 
-    ``link_eps`` is a (V, V) per-link packet success matrix; scenarios with
-    fewer physical nodes (e.g. fewer relays) are padded with isolated
+    ``link_eps`` is a (V, V) per-link packet success matrix — or a
+    (T, V, V) *schedule* of them (round t uses entry ``t % T``); scenarios
+    with fewer physical nodes (e.g. fewer relays) are padded with isolated
     zero-quality nodes, which leaves the routed client block unchanged.
-    ``rho`` is the derived E2E success matrix — None until `prepare`.
+    ``rho`` is the derived E2E success matrix (matching rank) — None until
+    `prepare`.  ``participation`` is an optional (N,) or (T, N) client
+    sampling mask; ``local_epochs`` an optional (N,) per-client epoch
+    vector.  All dynamic fields default to the static behavior.
     """
 
-    link_eps: jnp.ndarray         # (V, V)
+    link_eps: jnp.ndarray         # (V, V) or (T, V, V)
     seed: jnp.ndarray             # () int32   model-init / channel seed
     protocol_id: jnp.ndarray      # () int32   protocols.PROTOCOL_IDS
     mode_id: jnp.ndarray          # () int32   protocols.MODE_IDS
     aggregator: jnp.ndarray       # () int32   C-FL star center
     lr: jnp.ndarray               # () float32 local GD step size
-    rho: Any = None               # (V, V) E2E success (derived)
+    rho: Any = None               # (V, V) / (T, V, V) E2E success (derived)
+    participation: Any = None     # (N,) / (T, N) float32 sampling mask
+    local_epochs: Any = None      # (N,) int32 per-client local epochs
 
     def prepare(self) -> "Scenario":
-        """Fill the derived min-E2E-PER success matrix (idempotent)."""
+        """Fill the derived min-E2E-PER success matrix (idempotent).
+
+        Rank-3 ``link_eps`` schedules are re-routed per entry (vmapped
+        Floyd–Warshall over the time axis) ONCE, outside the round scan.
+        """
         if self.rho is not None:
             return self
-        rho, _ = routing.e2e_success(self.link_eps)
+        if jnp.ndim(self.link_eps) == 3:
+            rho = jax.vmap(lambda le: routing.e2e_success(le)[0])(
+                jnp.asarray(self.link_eps)
+            )
+        else:
+            rho, _ = routing.e2e_success(self.link_eps)
         return self._replace(rho=rho)
 
+    @property
+    def is_dynamic(self) -> bool:
+        """True if any trajectory axis is active (topology schedule,
+        client sampling, or heterogeneous local epochs)."""
+        return (jnp.ndim(self.link_eps) == 3
+                or self.participation is not None
+                or self.local_epochs is not None)
 
-def make_scenario(net: topology.Network, cfg: SimConfig) -> Scenario:
-    """Lift a (Network, SimConfig) pair into a traced Scenario."""
+    def at_round(self, t: jnp.ndarray) -> "Scenario":
+        """The static per-round view of a (possibly dynamic) scenario.
+
+        Time-leaved fields are sliced at ``t`` modulo their own schedule
+        length (a T=1 schedule is therefore exactly a static scenario);
+        already-static fields pass through untouched.  `round_step`
+        consumes these views — it never sees a time axis.
+        """
+        s = self
+        if jnp.ndim(s.link_eps) == 3:
+            tt = t % s.link_eps.shape[0]
+            rho = None if s.rho is None else s.rho[tt]
+            s = s._replace(link_eps=s.link_eps[tt], rho=rho)
+        if s.participation is not None and jnp.ndim(s.participation) == 2:
+            s = s._replace(
+                participation=s.participation[t % s.participation.shape[0]]
+            )
+        return s
+
+
+# One-time-warned (packet_len_bits, seg_len) pairs (see below).
+_WARNED_PACKET_PAIRS: set[tuple[int, int]] = set()
+
+
+def check_packet_len(recorded_bits: int | None, seg_len: int) -> bool:
+    """Validate the codec segment size against a recorded PER packet length.
+
+    The channel model samples per-*packet* errors for packets of
+    ``recorded_bits`` bits, while the codec transmits segments of
+    ``32 * seg_len`` bits; if they differ, the simulated PER applies to a
+    packet size the codec never sends (the paper itself ships this
+    mismatch: 25,000-bit PER packets vs 1024-float32 segments — see
+    `SimConfig.packet_len_bits`).  Returns True when consistent (or when
+    no packet length was recorded); warns ONCE per distinct
+    (recorded_bits, seg_len) pair otherwise.  Both the scalar path
+    (`make_scenario`) and the grid path (`scenarios.GridRunner.run`, via
+    `ScenarioGrid.packet_len_bits`) call this.
+    """
+    if recorded_bits is None:
+        return True
+    implied = errors.packet_len_bits(seg_len)
+    if int(recorded_bits) == implied:
+        return True
+    pair = (int(recorded_bits), int(seg_len))
+    if pair not in _WARNED_PACKET_PAIRS:
+        _WARNED_PACKET_PAIRS.add(pair)
+        warnings.warn(
+            f"network PER model uses {int(recorded_bits)}-bit packets but "
+            f"seg_len={seg_len} transmits {implied}-bit segments; pass "
+            "packet_len_bits=cfg.packet_len_bits to the network builder "
+            "for a self-consistent channel (the paper's own defaults "
+            "carry this mismatch)",
+            PacketLengthMismatchWarning,
+            stacklevel=3,
+        )
+    return False
+
+
+def check_packet_consistency(net: topology.Network, seg_len: int) -> bool:
+    """`check_packet_len` against a network's recorded packet length."""
+    return check_packet_len(getattr(net, "packet_len_bits", None), seg_len)
+
+
+def make_scenario(
+    net: topology.Network,
+    cfg: SimConfig,
+    *,
+    link_schedule: jnp.ndarray | None = None,
+    participation: jnp.ndarray | None = None,
+    local_epochs: jnp.ndarray | None = None,
+) -> Scenario:
+    """Lift a (Network, SimConfig) pair into a traced Scenario.
+
+    Optional dynamic axes: ``link_schedule`` replaces the network's static
+    link matrix with a (T, V, V) stack (see `topology.markov_link_schedule`
+    / `topology.fading_per_schedule`); ``participation`` is an (N,) or
+    (T, N) sampling mask; ``local_epochs`` an (N,) per-client vector.
+    """
+    check_packet_consistency(net, cfg.seg_len)
+    link_eps = net.link_eps if link_schedule is None else link_schedule
     return Scenario(
-        link_eps=jnp.asarray(net.link_eps, jnp.float32),
+        link_eps=jnp.asarray(link_eps, jnp.float32),
         seed=jnp.asarray(cfg.seed, jnp.int32),
         protocol_id=jnp.asarray(protocols.PROTOCOL_IDS[cfg.protocol], jnp.int32),
         mode_id=jnp.asarray(protocols.MODE_IDS[cfg.mode], jnp.int32),
         aggregator=jnp.asarray(cfg.cfl_aggregator, jnp.int32),
         lr=jnp.asarray(cfg.lr, jnp.float32),
+        participation=(None if participation is None
+                       else jnp.asarray(participation, jnp.float32)),
+        local_epochs=(None if local_epochs is None
+                      else jnp.asarray(local_epochs, jnp.int32)),
     )
 
 
@@ -179,18 +321,41 @@ def build_sim(
     def loss(params, x, y):
         return ce_loss(apply_fn(params, x), y)
 
-    def local_train(stacked, lr):
-        """Full-batch GD for `local_epochs` epochs (paper eq. 3), per client."""
+    def local_train(stacked, lr, epochs=None):
+        """Full-batch GD for `local_epochs` epochs (paper eq. 3), per client.
 
-        def train_one(params, x, y):
-            def body(prm, _):
+        ``epochs`` (optional, (N,) int32) enables heterogeneous compute: the
+        scan still runs the static `local_epochs` bound, but client m's
+        update is masked out after its own epoch count (values clip to the
+        bound).  ``epochs=None`` keeps the exact static trace.
+        """
+        if epochs is None:
+            def train_one(params, x, y):
+                def body(prm, _):
+                    g = jax.grad(loss)(prm, x, y)
+                    return jax.tree.map(lambda w, gw: w - lr * gw, prm, g), None
+
+                params, _ = jax.lax.scan(body, params, None,
+                                         length=local_epochs)
+                return params
+
+            return jax.vmap(train_one)(stacked, xs, ys)
+
+        epochs = jnp.minimum(jnp.asarray(epochs, jnp.int32), local_epochs)
+
+        def train_one_masked(params, x, y, ep):
+            def body(prm, i):
                 g = jax.grad(loss)(prm, x, y)
-                return jax.tree.map(lambda w, gw: w - lr * gw, prm, g), None
+                new = jax.tree.map(lambda w, gw: w - lr * gw, prm, g)
+                prm = jax.tree.map(
+                    lambda a, b: jnp.where(i < ep, a, b), new, prm
+                )
+                return prm, None
 
-            params, _ = jax.lax.scan(body, params, None, length=local_epochs)
+            params, _ = jax.lax.scan(body, params, jnp.arange(local_epochs))
             return params
 
-        return jax.vmap(train_one)(stacked, xs, ys)
+        return jax.vmap(train_one_masked)(stacked, xs, ys, epochs)
 
     def evaluate(stacked):
         def one(params):
@@ -208,13 +373,35 @@ def build_sim(
         """One pure D-FL round: local training + traced-protocol exchange.
 
         state: {"params": client-stacked pytree}; rng: this round's key.
+        ``scenario`` must be a per-round view (rank-2 ``link_eps``; slice a
+        dynamic scenario with `Scenario.at_round` first).  A non-None
+        ``participation`` mask makes sampled-out clients skip local
+        training, contribute nothing to aggregation, and keep their
+        parameters untouched.
         """
-        stacked = local_train(state["params"], scenario.lr)
+        if jnp.ndim(scenario.link_eps) == 3:
+            raise ValueError(
+                "round_step takes a per-round scenario; slice a dynamic "
+                "scenario with scenario.at_round(t) (run_scenario does "
+                "this inside its scan)"
+            )
+        part = scenario.participation
+        if part is not None:
+            part = part[:n]
+        stacked = local_train(state["params"], scenario.lr,
+                              scenario.local_epochs)
+        if part is not None:
+            stacked = jax.tree.map(
+                lambda new, old: jnp.where(
+                    part.reshape((-1,) + (1,) * (new.ndim - 1)) > 0, new, old
+                ),
+                stacked, state["params"],
+            )
         w_seg, spec, m_params = protocols._to_segments(stacked, seg_len)
         w_seg, _e, bias = protocols.dispatch_round_seg(
             w_seg, p, scenario.rho, scenario.link_eps, rng,
             scenario.protocol_id, scenario.mode_id, scenario.aggregator,
-            n_mixes=aayg_mixes,
+            n_mixes=aayg_mixes, participation=part,
         )
         stacked = protocols._from_segments(w_seg, spec, m_params)
         metrics = {
@@ -233,14 +420,30 @@ def build_sim(
             lambda leaf: jnp.broadcast_to(leaf[None], (n,) + leaf.shape), params0
         )
 
-        def body(carry, _):
+        if not scenario.is_dynamic:
+            # Static scenario: the EXACT pre-dynamic trace (bit-identity).
+            def body(carry, _):
+                state, key = carry
+                key, k_round = jax.random.split(key)
+                state, metrics = round_step(state, k_round, scenario)
+                return (state, key), metrics
+
+            _, metrics = jax.lax.scan(
+                body, ({"params": stacked}, key), None, length=n_rounds
+            )
+            return metrics
+
+        # Dynamic scenario: scan over the round index, slicing time-leaved
+        # fields per round.  The RNG split order matches the static path,
+        # so a T=1 schedule (or an all-ones mask) reproduces it exactly.
+        def body_dyn(carry, t):
             state, key = carry
             key, k_round = jax.random.split(key)
-            state, metrics = round_step(state, k_round, scenario)
+            state, metrics = round_step(state, k_round, scenario.at_round(t))
             return (state, key), metrics
 
         _, metrics = jax.lax.scan(
-            body, ({"params": stacked}, key), None, length=n_rounds
+            body_dyn, ({"params": stacked}, key), jnp.arange(n_rounds)
         )
         return metrics
 
