@@ -11,10 +11,14 @@ the first k jax devices (see `grid_devices`); combine with
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 
 import numpy as np
+
+# Repo root: BENCH_*.json perf baselines land here (see `write_bench`).
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 from repro.core import topology
 from repro.data import synthetic
@@ -30,6 +34,33 @@ HARSH_TX_DBM = 17.0
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_bench(name: str, rows: list[dict], *, path: str | None = None) -> str:
+    """Write machine-readable perf rows to ``BENCH_<name>.json`` (repo root).
+
+    The shared emission path for every benchmark's perf trajectory: each row
+    is a flat dict (at minimum ``{"name": ..., "us_per_call": ...}``, plus
+    free-form derived fields), wrapped with the environment needed to
+    compare runs (backend, device count, jax version).  Committed baselines
+    give later PRs a number to beat; CI's perf-smoke job uploads them as
+    artifacts.
+    """
+    import jax
+
+    payload = {
+        "bench": name,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "rows": rows,
+    }
+    path = path or os.path.join(ROOT, f"BENCH_{name}.json")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.relpath(path, ROOT)} ({len(rows)} rows)")
+    return path
 
 
 def grid_devices():

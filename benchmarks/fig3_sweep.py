@@ -14,9 +14,16 @@ one batched dispatch per protocol row.  The timing printout compares:
                      every sweep point re-traced + re-compiled), measured
                      on a subset and extrapolated.
 
+The round-loop compute diet (DESIGN.md §9) is measured on the same grid:
+``eval_every`` thins the per-round test-set evaluation inside the scan and
+``track_bias=False`` drops the ||Lambda||^2 diagnostic — the warm before /
+after wall-clock lands in ``BENCH_grid.json`` (`common.write_bench`), the
+repo's grid-dispatch perf baseline.
+
 `REPRO_GRID_DEVICES=k` shards the batched dispatch over k devices;
 benchmarks/grid_scaling.py sweeps this grid over device counts.
 """
+import dataclasses
 import time
 
 from benchmarks import common
@@ -92,6 +99,45 @@ def main() -> None:
         f"legacy_retrace_est_s={t_legacy:.2f};"
         f"speedup_vs_legacy={t_legacy / max(t_batched, 1e-9):.1f}x",
     )
+
+    # Round-loop compute diet: same grid, eval thinned to every 4th round
+    # and the bias diagnostic off.  Warm-vs-warm is the honest comparison
+    # (compile time excluded on both sides).
+    cfg_diet = dataclasses.replace(common.standard_cfg(n_rounds=N_ROUNDS),
+                                   eval_every=4, track_bias=False)
+    runner_diet = scenarios.GridRunner(init, apply_fn, data, cfg_diet,
+                                       devices=common.grid_devices())
+    t0 = time.time()
+    runner_diet.run(grid)
+    t_diet_cold = time.time() - t0
+    t0 = time.time()
+    runner_diet.run(grid)
+    t_diet_warm = time.time() - t0
+    common.emit(
+        "fig3/compute_diet", t_diet_warm * 1e6,
+        f"eval_every=4;track_bias=0;warm_s={t_diet_warm:.2f};"
+        f"baseline_warm_s={t_warm:.2f};"
+        f"warm_speedup={t_warm / max(t_diet_warm, 1e-9):.2f}x",
+    )
+
+    common.write_bench("grid", [
+        {"name": "fig3/grid_cold", "us_per_call": round(t_batched * 1e6, 1),
+         "scenarios": len(grid), "n_rounds": N_ROUNDS},
+        {"name": "fig3/grid_warm", "us_per_call": round(t_warm * 1e6, 1),
+         "scenarios": len(grid), "n_rounds": N_ROUNDS,
+         "eval_every": 1, "track_bias": True},
+        {"name": "fig3/grid_warm_diet",
+         "us_per_call": round(t_diet_warm * 1e6, 1),
+         "scenarios": len(grid), "n_rounds": N_ROUNDS,
+         "eval_every": 4, "track_bias": False,
+         "cold_us": round(t_diet_cold * 1e6, 1),
+         "warm_speedup_vs_baseline":
+             round(t_warm / max(t_diet_warm, 1e-9), 3)},
+        {"name": "fig3/per_scenario_dispatch",
+         "us_per_call": round(t_seq * 1e6, 1), "scenarios": len(grid)},
+        {"name": "fig3/legacy_retrace_est",
+         "us_per_call": round(t_legacy * 1e6, 1), "scenarios": len(grid)},
+    ])
 
 
 if __name__ == "__main__":

@@ -1,37 +1,101 @@
-"""Kernel micro-bench: Pallas (interpret) vs jnp reference; correctness +
-throughput proxy (CPU timings are NOT TPU predictions)."""
+"""Kernel micro-bench: Pallas vs jnp reference; correctness + throughput
+proxy (CPU interpret-mode timings are NOT TPU predictions).
+
+Covers the R&A aggregation kernel in BOTH aggregation modes and through the
+batched (grid-axis) entry point, plus the rwkv6 scan and flash-attention
+kernels.  Every row is emitted as CSV (`common.emit`) AND collected into
+``BENCH_kernels.json`` (`common.write_bench`) — the machine-readable perf
+trajectory later PRs diff against.
+
+Correctness is enforced, not just printed: any float32 kernel-vs-reference
+max error above 1e-5 raises (CI's perf-smoke job runs this module at tiny
+shapes with ``REPRO_BENCH_TINY=1 REPRO_PALLAS_INTERPRET=1``).
+"""
+import os
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
 from repro.kernels import ops, ref
 
+TOL = 1e-5
 
-def main() -> None:
-    key = jax.random.PRNGKey(0)
-    # ra_aggregate at paper scale: 10 clients, CNN-sized model (38.72 Mbit
-    # = 1.21M float32) in K=1024 segments -> L=1182
-    n, l, k = 10, 1182, 1024
+
+def _tiny() -> bool:
+    return os.environ.get("REPRO_BENCH_TINY", "").strip() not in ("", "0")
+
+
+def _check(name: str, got, want, *, tol: float = TOL) -> float:
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    if err > tol:
+        raise RuntimeError(f"{name}: kernel-vs-ref max error {err:.2e} > {tol}")
+    return err
+
+
+def _row(rows, name, us, derived: str, **extra):
+    common.emit(name, us, derived)
+    rows.append({"name": name, "us_per_call": round(us, 1), **extra})
+
+
+def bench_ra_aggregate(rows, key) -> None:
+    tiny = _tiny()
+    if tiny:
+        # Prime L exercises the pad-up-to-block path; still < 1 s interpreted.
+        n, l, k = 4, 13, 128
+        repeats = 5
+    else:
+        # Paper scale: 10 clients, CNN-sized model (38.72 Mbit = 1.21M
+        # float32) in K=1024 segments -> L=1182.
+        n, l, k = 10, 1182, 1024
+        repeats = 2
     ks = jax.random.split(key, 3)
     w = jax.random.normal(ks[0], (n, l, k))
-    p = jnp.ones((n,)) / n
-    e = (jax.random.uniform(ks[2], (n, n, l)) < 0.95).astype(jnp.float32)
-    e = jnp.maximum(e, jnp.eye(n)[:, :, None])
+    p = jax.nn.softmax(jax.random.normal(ks[1], (n,)))
+    e = jax.random.uniform(ks[2], (n, n, l)) < 0.95
+    e = e | jnp.eye(n, dtype=jnp.bool_)[:, :, None]
 
-    ref_out, us_ref = common.timed(
-        lambda: jax.block_until_ready(ref.ra_aggregate_ref(w, p, e)), repeats=3
-    )
-    common.emit("kernel/ra_aggregate_ref", us_ref, f"N={n};L={l};K={k}")
-    pal_out, us_pal = common.timed(
-        lambda: jax.block_until_ready(ops.ra_aggregate(w, p, e)), repeats=1
-    )
-    err = float(jnp.max(jnp.abs(pal_out - ref_out)))
-    common.emit("kernel/ra_aggregate_pallas_interp", us_pal,
-                f"allclose_err={err:.2e}")
+    for mode, ref_fn in (("ra_normalized", ref.ra_aggregate_ref),
+                         ("substitution", ref.ra_substitution_ref)):
+        want, us_ref = common.timed(
+            lambda: jax.block_until_ready(ref_fn(w, p, e.astype(jnp.float32))),
+            repeats=3,
+        )
+        _row(rows, f"kernel/ra_{mode}_ref", us_ref, f"N={n};L={l};K={k}",
+             shape=[n, l, k], impl="jnp")
+        got, us_pal = common.timed(
+            lambda: jax.block_until_ready(ops.ra_aggregate(w, p, e, mode=mode)),
+            repeats=repeats,
+        )
+        err = _check(f"ra_{mode}", got, want)
+        _row(rows, f"kernel/ra_{mode}_pallas", us_pal,
+             f"allclose_err={err:.2e}", shape=[n, l, k], impl="pallas",
+             max_err=err)
 
-    # rwkv6 at reduced scale
-    b, s, h, d = 1, 256, 4, 64
+    # Batched entry point (the grid engine's vmap target): B scenarios fold
+    # into the Pallas grid's leading dimension.
+    b, n, l, k = (3, 4, 13, 128) if tiny else (8, 6, 37, 256)
+    ks = jax.random.split(key, 3)
+    wb = jax.random.normal(ks[0], (b, n, l, k))
+    pb = jax.nn.softmax(jax.random.normal(ks[1], (n,)))
+    eb = jax.random.uniform(ks[2], (b, n, n, l)) < 0.9
+    eb = eb | jnp.eye(n, dtype=jnp.bool_)[None, :, :, None]
+    want = jax.vmap(
+        lambda wi, ei: ref.ra_aggregate_ref(wi, pb, ei.astype(jnp.float32))
+    )(wb, eb)
+    got, us_b = common.timed(
+        lambda: jax.block_until_ready(ops.ra_aggregate(wb, pb, eb)),
+        repeats=3 if tiny else 2,
+    )
+    err = _check("ra_batched", got, want)
+    _row(rows, "kernel/ra_batched_pallas", us_b,
+         f"B={b};allclose_err={err:.2e}", shape=[b, n, l, k],
+         impl="pallas", max_err=err)
+
+
+def bench_rwkv6(rows, key) -> None:
+    b, s, h, d = (1, 64, 2, 32) if _tiny() else (1, 256, 4, 64)
     ks = jax.random.split(key, 5)
     r = jax.random.normal(ks[0], (b, s, h, d)) * 0.5
     kk = jax.random.normal(ks[1], (b, s, h, d)) * 0.5
@@ -42,30 +106,47 @@ def main() -> None:
         lambda: jax.block_until_ready(ref.rwkv6_scan_ref(r, kk, v, wd, u)),
         repeats=3,
     )
-    common.emit("kernel/rwkv6_sequential_ref", us_r, f"B={b};S={s};H={h};D={d}")
+    _row(rows, "kernel/rwkv6_sequential_ref", us_r,
+         f"B={b};S={s};H={h};D={d}", shape=[b, s, h, d], impl="jnp")
     got, us_p = common.timed(
         lambda: jax.block_until_ready(ops.rwkv6_scan(r, kk, v, wd, u)),
-        repeats=1,
+        repeats=2,
     )
-    err = float(jnp.max(jnp.abs(got - want)))
-    common.emit("kernel/rwkv6_pallas_interp", us_p, f"allclose_err={err:.2e}")
+    # The chunked recurrence accumulates more rounding than the elementwise
+    # aggregation kernel; budget 3e-5 (matches tests/test_kernels.py).
+    err = _check("rwkv6", got, want, tol=3e-5)
+    _row(rows, "kernel/rwkv6_pallas", us_p, f"allclose_err={err:.2e}",
+         shape=[b, s, h, d], impl="pallas", max_err=err)
 
-    # flash attention (causal GQA)
-    b, s, h, kv_, dh = 1, 256, 8, 2, 64
+
+def bench_flash_attention(rows, key) -> None:
+    b, s, h, kv_, dh = (1, 64, 4, 2, 32) if _tiny() else (1, 256, 8, 2, 64)
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (b, s, h, dh))
-    kk2 = jax.random.normal(ks[1], (b, s, kv_, dh))
-    v2 = jax.random.normal(ks[2], (b, s, kv_, dh))
+    kk = jax.random.normal(ks[1], (b, s, kv_, dh))
+    v = jax.random.normal(ks[2], (b, s, kv_, dh))
     want, us_r = common.timed(
         lambda: jax.block_until_ready(
-            ref.flash_attention_ref(q, kk2, v2, scale=dh**-0.5)), repeats=3)
-    common.emit("kernel/flash_attn_ref", us_r, f"B={b};S={s};H={h};KV={kv_};D={dh}")
+            ref.flash_attention_ref(q, kk, v, scale=dh**-0.5)), repeats=3)
+    _row(rows, "kernel/flash_attn_ref", us_r,
+         f"B={b};S={s};H={h};KV={kv_};D={dh}", shape=[b, s, h, kv_, dh],
+         impl="jnp")
     got, us_p = common.timed(
         lambda: jax.block_until_ready(
-            ops.flash_attention(q, kk2, v2, scale=dh**-0.5, block_q=64,
-                                block_k=64)), repeats=1)
-    err = float(jnp.max(jnp.abs(got - want)))
-    common.emit("kernel/flash_attn_pallas_interp", us_p, f"allclose_err={err:.2e}")
+            ops.flash_attention(q, kk, v, scale=dh**-0.5, block_q=32,
+                                block_k=32)), repeats=2)
+    err = _check("flash_attn", got, want)
+    _row(rows, "kernel/flash_attn_pallas", us_p, f"allclose_err={err:.2e}",
+         shape=[b, s, h, kv_, dh], impl="pallas", max_err=err)
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    rows: list[dict] = []
+    bench_ra_aggregate(rows, key)
+    bench_rwkv6(rows, jax.random.fold_in(key, 1))
+    bench_flash_attention(rows, jax.random.fold_in(key, 2))
+    common.write_bench("kernels", rows)
 
 
 if __name__ == "__main__":

@@ -128,6 +128,17 @@ def grid_dispatch() -> None:
         f"sharded{len(devs)}_warm_s={t_shard_warm:.2f};"
         f"acc_worst_channel={acc_lo:.3f};acc_best_channel={acc_hi:.3f}"
     )
+    common.write_bench("exchange", [
+        {"name": "perf_exchange/grid_warm",
+         "us_per_call": round(t_warm * 1e6, 1), "scenarios": len(grid)},
+        {"name": "perf_exchange/grid_cold",
+         "us_per_call": round(t_cold * 1e6, 1), "scenarios": len(grid)},
+        {"name": "perf_exchange/per_scenario_dispatch",
+         "us_per_call": round(t_seq * 1e6, 1), "scenarios": len(grid)},
+        {"name": f"perf_exchange/sharded{len(devs)}_warm",
+         "us_per_call": round(t_shard_warm * 1e6, 1),
+         "scenarios": len(grid), "devices": len(devs)},
+    ])
 
 
 def main() -> None:

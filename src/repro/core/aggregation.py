@@ -23,13 +23,58 @@ the sampled senders automatically; substitution redirects their mass to the
 receiver's own segments), and `keep_nonparticipants` restores sampled-out
 receivers' own segments after aggregation.  An all-ones mask is a bitwise
 no-op.
+
+Substrates (DESIGN.md §9): `apply_mode` — the simulator's aggregation hot
+path — executes on one of two interchangeable substrates:
+
+  * ``jnp``    — the einsum reference in this module (XLA fuses it well on
+                 CPU; the bit-identity baseline),
+  * ``pallas`` — the fused `repro.kernels.ra_aggregate` kernel (both modes,
+                 batched: `run_grid`'s vmap folds the grid axis into the
+                 Pallas grid).
+
+Selection is STATIC (it changes the compiled program): the ``impl``
+argument, else the ``REPRO_AGG_IMPL`` env var, else ``auto`` = native
+Pallas on TPU and the jnp reference elsewhere (CPU CI never pays
+interpret-mode cost).  Success masks may arrive packed (bool_/uint8 — see
+`errors.sample_success`); both substrates cast to float32 exactly once at
+the aggregation boundary, so the jnp path stays bit-identical to the
+historical float32 plumbing.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 _EPS = 1e-12
+
+IMPLS = ("auto", "jnp", "pallas")
+
+
+def default_impl() -> str:
+    """The process-wide substrate choice (``REPRO_AGG_IMPL``, default auto)."""
+    return os.environ.get("REPRO_AGG_IMPL", "auto")
+
+
+def resolve_impl(impl: str | None = None) -> str:
+    """Normalize an impl choice to a concrete substrate ('jnp' | 'pallas').
+
+    ``None`` defers to `default_impl`; ``auto`` resolves to the native
+    Pallas kernel on TPU and the jnp reference everywhere else.
+    """
+    impl = default_impl() if impl is None else impl
+    if impl not in IMPLS:
+        raise ValueError(f"agg_impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return impl
+
+
+def _as_f32_mask(e: jnp.ndarray) -> jnp.ndarray:
+    """The single packed-mask -> float32 cast at the aggregation boundary."""
+    return e if e.dtype == jnp.float32 else e.astype(jnp.float32)
 
 
 def aggregation_coefficients(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
@@ -43,7 +88,7 @@ def aggregation_coefficients(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
       coeff: (N, N, L); for every (n, l): sum_m coeff[m, n, l] == 1 provided
       at least one segment arrived (always true: own model always counts).
     """
-    w = p[:, None, None] * e                      # (N, N, L)
+    w = p[:, None, None] * _as_f32_mask(e)        # (N, N, L)
     denom = jnp.sum(w, axis=0, keepdims=True)      # (1, N, L)
     return w / jnp.maximum(denom, _EPS)
 
@@ -65,8 +110,9 @@ def substitution(w_seg: jnp.ndarray, p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndar
     segment, keeping the ideal weights p_m:
       out[n, l] = sum_m p_m * (e[m,n,l] w[m,l] + (1 - e[m,n,l]) w[n,l])
     """
-    recv = jnp.einsum("mnl,mlk->nlk", p[:, None, None] * e, w_seg)
-    miss = jnp.einsum("mnl->nl", p[:, None, None] * (1.0 - e))  # (N, L)
+    ef = _as_f32_mask(e)
+    recv = jnp.einsum("mnl,mlk->nlk", p[:, None, None] * ef, w_seg)
+    miss = jnp.einsum("mnl->nl", p[:, None, None] * (1.0 - ef))  # (N, L)
     return recv + miss[:, :, None] * w_seg
 
 
@@ -97,9 +143,13 @@ def mask_senders(e: jnp.ndarray, participation: jnp.ndarray) -> jnp.ndarray:
     keeping the own-model diagonal at 1 (a receiver always holds its own
     segments, so normalization denominators stay >= p_n > 0).  An all-ones
     mask returns ``e`` bitwise unchanged (`sample_success` already sets the
-    diagonal).
+    diagonal).  Packed bool_ masks stay packed (the float32 cast happens
+    once at the aggregation boundary).
     """
     n = e.shape[0]
+    if e.dtype == jnp.bool_:
+        masked = e & (participation[:n, None, None] > 0)
+        return masked | jnp.eye(n, dtype=jnp.bool_)[:, :, None]
     masked = e * participation[:n, None, None]
     return jnp.maximum(masked, jnp.eye(n)[:, :, None])
 
@@ -124,10 +174,31 @@ MODE_IDS = {"ra_normalized": 0, "substitution": 1}
 _MODE_BRANCHES = (ra_normalized, substitution)
 
 
+def _pallas_branches():
+    from repro.kernels import ops
+
+    def _ra(w_seg, p, e):
+        return ops.ra_aggregate(w_seg, p, e, mode="ra_normalized")
+
+    def _sub(w_seg, p, e):
+        return ops.ra_aggregate(w_seg, p, e, mode="substitution")
+
+    return (_ra, _sub)
+
+
 def apply_mode(mode_id: jnp.ndarray, w_seg: jnp.ndarray, p: jnp.ndarray,
-               e: jnp.ndarray) -> jnp.ndarray:
-    """Aggregate with a *traced* mechanism selector (see MODE_IDS)."""
-    return jax.lax.switch(mode_id, _MODE_BRANCHES, w_seg, p, e)
+               e: jnp.ndarray, *, impl: str | None = None) -> jnp.ndarray:
+    """Aggregate with a *traced* mechanism selector (see MODE_IDS).
+
+    ``impl`` selects the execution substrate STATICALLY (see the module
+    docstring): 'jnp' (einsum reference), 'pallas' (fused kernel, batched
+    under vmap), 'auto'/None (env var, then backend default).  Both
+    substrates agree to <= 1e-5 (tests/test_agg_substrate.py); the jnp
+    branch is bit-identical to the historical path.
+    """
+    if resolve_impl(impl) == "pallas":
+        return jax.lax.switch(mode_id, _pallas_branches(), w_seg, p, e)
+    return jax.lax.switch(mode_id, _MODE_BRANCHES, w_seg, p, _as_f32_mask(e))
 
 
 def bias_matrix(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
@@ -150,3 +221,24 @@ def bias_sq_norm(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
     """
     lam = bias_matrix(p, e)
     return jnp.sum(lam * lam, axis=(1, 2))
+
+
+def bias_sq_norm_fused(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """||Lambda_l||_F^2 per segment WITHOUT materializing (N, N, L) / (L, N, N).
+
+    The round loop's bias diagnostic.  Because e is 0/1 (e^2 == e), the
+    entry-wise sum of squares collapses onto the same per-(receiver,
+    segment) reductions the aggregation pass already computes:
+
+      sum_m (p_m - p_m e/d)^2 = sum_m p_m^2 - (2/d - 1/d^2) sum_m p_m^2 e
+
+    with d[n, l] = sum_m p_m e[m, n, l] (the adaptive-normalization
+    denominator, clamped like `aggregation_coefficients`).  Only two (N, L)
+    mask reductions are built — no per-round (L, N, N) bias tensor.
+    Agrees with `bias_sq_norm` to float32 roundoff (not bitwise).
+    """
+    w = p[:, None, None] * _as_f32_mask(e)                  # (N, N, L)
+    d = jnp.maximum(jnp.sum(w, axis=0), _EPS)               # (N, L)
+    s2 = jnp.sum(p[:, None, None] * w, axis=0)              # (N, L)
+    per_nl = jnp.sum(p * p) - (2.0 / d - 1.0 / (d * d)) * s2
+    return jnp.sum(per_nl, axis=0)                          # (L,)

@@ -70,8 +70,9 @@ def ra_exchange(
     pad = l * seg_len - m_params
     seg = jnp.pad(flat, (0, pad)).reshape(l, seg_len)  # (L, K)
 
-    # Shared-key mask: every client computes the same (N, N, L) tensor.
-    e = err.sample_success(key, rho, l, n_clients=n)   # (N, N, L)
+    # Shared-key mask: every client computes the same (N, N, L) tensor
+    # (sampled packed; cast once here — this path's aggregation boundary).
+    e = err.sample_success(key, rho, l, n_clients=n).astype(jnp.float32)
 
     p_me = jax.lax.dynamic_index_in_dim(p, me, keepdims=False)
     e_from_me = jax.lax.dynamic_index_in_dim(e, me, axis=0, keepdims=False)  # (N, L)

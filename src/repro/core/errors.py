@@ -80,6 +80,7 @@ def sample_success(
     n_segments: int,
     *,
     n_clients: int | None = None,
+    dtype: jnp.dtype = jnp.bool_,
 ) -> jnp.ndarray:
     """Sample success indicators e_{m,n,l} ~ Bernoulli(rho_{m,n}).
 
@@ -88,13 +89,18 @@ def sample_success(
       rho: (V, V) E2E packet success rates (only the client block is used).
       n_segments: L.
       n_clients: number of FL clients N (defaults to rho.shape[0]).
+      dtype: mask dtype — PACKED ``bool_`` by default (1 byte/indicator, a
+        quarter of the float32 mask's HBM traffic; uint8/float32 also
+        accepted).  Consumers cast to float32 exactly once at the
+        aggregation boundary (`core.aggregation`), so arithmetic — and the
+        jnp path's bit-identity — is unchanged.
 
     Returns:
-      e: (N, N, L) float32 in {0, 1}.  e[n, n, :] == 1 (own model is local).
+      e: (N, N, L) in {0, 1}.  e[n, n, :] == 1 (own model is local).
     """
     n = n_clients or rho.shape[0]
     r = rho[:n, :n]
     u = jax.random.uniform(key, (n, n, n_segments))
-    e = (u < r[:, :, None]).astype(jnp.float32)
-    eye = jnp.eye(n)[:, :, None]
-    return jnp.maximum(e, eye)
+    e = u < r[:, :, None]
+    e = e | jnp.eye(n, dtype=jnp.bool_)[:, :, None]
+    return e if dtype == jnp.bool_ else e.astype(dtype)

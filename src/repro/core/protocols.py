@@ -64,22 +64,26 @@ def ra_round_seg(
     key: jax.Array,
     mode_id: jnp.ndarray,
     participation: jnp.ndarray | None = None,
+    *,
+    agg_impl: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """R&A local aggregation on segments; returns (out, e) with the sampled
-    (N, N, L) success mask exposed for bias/Λ diagnostics.
+    (N, N, L) success mask (packed bool_) exposed for bias/Λ diagnostics.
 
     With a ``participation`` mask (N,), sampled-out senders are removed
     from ``e`` (adaptive normalization renormalizes over the sampled
     senders automatically) and sampled-out receivers keep their own
     segments untouched.  ``participation=None`` keeps the exact static
-    trace.
+    trace.  ``agg_impl`` selects the aggregation substrate (STATIC — see
+    `aggregation.apply_mode`).
     """
     n = w_seg.shape[0]
     e = errors.sample_success(key, rho, w_seg.shape[1], n_clients=n)
     if participation is None:
-        return aggregation.apply_mode(mode_id, w_seg, p, e), e
+        return aggregation.apply_mode(mode_id, w_seg, p, e,
+                                      impl=agg_impl), e
     e = aggregation.mask_senders(e, participation)
-    out = aggregation.apply_mode(mode_id, w_seg, p, e)
+    out = aggregation.apply_mode(mode_id, w_seg, p, e, impl=agg_impl)
     return aggregation.keep_nonparticipants(participation, out, w_seg), e
 
 
@@ -92,6 +96,7 @@ def aayg_round_seg(
     *,
     n_mixes: int = 1,
     participation: jnp.ndarray | None = None,
+    agg_impl: str | None = None,
 ) -> jnp.ndarray:
     """Aggregate-as-You-Go gossip: J = n_mixes one-hop mix iterations.
 
@@ -106,11 +111,11 @@ def aayg_round_seg(
 
     def mix(w, key):
         u = jax.random.uniform(key, (n, n, l))
-        e = (u < eps[:, :, None]).astype(jnp.float32)
+        e = u < eps[:, :, None]                     # packed bool_ mask
         if participation is not None:
-            e = e * participation[:n, None, None]
-        e = jnp.maximum(e, jnp.eye(n)[:, :, None])  # own model always present
-        out = aggregation.apply_mode(mode_id, w, p, e)
+            e = e & (participation[:n, None, None] > 0)
+        e = e | jnp.eye(n, dtype=jnp.bool_)[:, :, None]  # own model present
+        out = aggregation.apply_mode(mode_id, w, p, e, impl=agg_impl)
         if participation is not None:
             out = aggregation.keep_nonparticipants(participation[:n], out, w)
         return out
@@ -203,13 +208,15 @@ def dispatch_round_seg(
     *,
     n_mixes: int = 1,
     participation: jnp.ndarray | None = None,
+    agg_impl: str | None = None,
+    track_bias: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One exchange round with a fully traced (protocol, mode, aggregator).
 
     Returns (new_w_seg, e, bias) where ``e`` is the sampled (N, N, L) success
-    mask for R&A (all-ones for other protocols) and ``bias`` is the mean
-    ||Lambda_l||_F^2 diagnostic (NaN where undefined, 0 for ideal C-FL) —
-    matching the scalar simulator's per-protocol bookkeeping.
+    mask for R&A (packed bool_; all-ones for other protocols) and ``bias``
+    is the mean ||Lambda_l||_F^2 diagnostic (NaN where undefined, 0 for
+    ideal C-FL) — matching the scalar simulator's per-protocol bookkeeping.
 
     ``participation`` (optional (N,) client sampling mask) threads through
     every branch: sampled-out clients contribute to no aggregation and keep
@@ -217,18 +224,27 @@ def dispatch_round_seg(
     the participation-masked ``e`` — the realized coefficients).  One
     carve-out: C-FL's star center always participates (see
     `cfl_round_seg`).  None (the default) keeps the exact static trace.
+
+    Two STATIC compute knobs (they change the compiled program, not its
+    semantics): ``agg_impl`` selects the aggregation substrate
+    (`aggregation.apply_mode`), and ``track_bias=False`` skips the R&A bias
+    diagnostic entirely (bias is NaN; the two (N, L) mask reductions of
+    `aggregation.bias_sq_norm_fused` drop out of the hot loop).
     """
     n, l, _ = w_seg.shape
-    e_ones = jnp.ones((n, n, l), jnp.float32)
+    e_ones = jnp.ones((n, n, l), jnp.bool_)
     nan = jnp.asarray(jnp.nan, jnp.float32)
 
     def b_ra(_):
-        out, e = ra_round_seg(w_seg, p, rho, key, mode_id, participation)
-        return out, e, jnp.mean(aggregation.bias_sq_norm(p, e))
+        out, e = ra_round_seg(w_seg, p, rho, key, mode_id, participation,
+                              agg_impl=agg_impl)
+        bias = (jnp.mean(aggregation.bias_sq_norm_fused(p, e))
+                if track_bias else nan)
+        return out, e, bias
 
     def b_aayg(_):
         out = aayg_round_seg(w_seg, p, link_eps, key, mode_id, n_mixes=n_mixes,
-                             participation=participation)
+                             participation=participation, agg_impl=agg_impl)
         return out, e_ones, nan
 
     def b_cfl(_):

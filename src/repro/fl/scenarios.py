@@ -519,10 +519,15 @@ class ScenarioGrid:
 
 @dataclasses.dataclass
 class GridResult:
-    """Stacked per-scenario trajectories from one batched dispatch."""
+    """Stacked per-scenario trajectories from one batched dispatch.
 
-    acc: np.ndarray        # (G, rounds, N) test accuracy
-    loss: np.ndarray       # (G, rounds, N) train loss
+    With eval thinning (``SimConfig.eval_every=k``) acc/loss carry
+    ``rounds // k`` rows (row j = round ``(j + 1) * k - 1``); ``bias``
+    always stays per-round.
+    """
+
+    acc: np.ndarray        # (G, evals, N)  test accuracy
+    loss: np.ndarray       # (G, evals, N)  train loss
     bias: np.ndarray       # (G, rounds)    mean ||Lambda_l||_F^2 (ra only)
     labels: list[str]
 
@@ -628,8 +633,10 @@ class GridRunner:
       data: the shared `FederatedDataset` (per-scenario knobs live in
         the grid, NOT here).
       cfg: static knobs baked into the compiled program — seg_len,
-        local_epochs, n_rounds, aayg_mixes.  Per-scenario fields of
-        `cfg` (protocol, mode, lr, seed) are ignored by the runner.
+        local_epochs, n_rounds, aayg_mixes, plus the compute knobs
+        agg_impl / eval_every / track_bias (DESIGN.md §9).  Per-scenario
+        fields of `cfg` (protocol, mode, lr, seed) are ignored by the
+        runner.
       devices: default device spec for `run()` — a device sequence, an
         int (first k devices), or None for the single-device vmap path.
         Overridable per call.
@@ -648,11 +655,18 @@ class GridRunner:
             init_fn, apply_fn, data,
             seg_len=cfg.seg_len, local_epochs=cfg.local_epochs,
             n_rounds=cfg.n_rounds, aayg_mixes=cfg.aayg_mixes,
+            agg_impl=cfg.agg_impl, eval_every=cfg.eval_every,
+            track_bias=cfg.track_bias,
         )
         self.devices = devices
         self._seg_len = cfg.seg_len
         self._jitted: dict[tuple, Callable] = {}  # (in_axes, mesh) -> jit
-        self._scalar = jax.jit(self.sim.run_scenario)
+        # Donate the scenario batch on accelerators: the (G, ...) stacks are
+        # re-transferred from the host-side grid each dispatch, so their
+        # device buffers never outlive one call (no double-buffering of the
+        # round-loop state against its inputs).  No-op on CPU.
+        self._donate = simulator.donate_kwargs()
+        self._scalar = jax.jit(self.sim.run_scenario, **self._donate)
 
     def run(self, grid: ScenarioGrid, *,
             group_by_protocol: bool = True,
@@ -717,7 +731,8 @@ class GridRunner:
         sig = (tuple(axes._asdict().items()), None)
         if sig not in self._jitted:
             self._jitted[sig] = jax.jit(
-                jax.vmap(self.sim.run_scenario, in_axes=(axes,))
+                jax.vmap(self.sim.run_scenario, in_axes=(axes,)),
+                **self._donate,
             )
         return self._jitted[sig](args)
 
@@ -756,7 +771,7 @@ class GridRunner:
                 # rejects some primitives in the RNG/scan body).
                 **_SHARD_MAP_NO_CHECK,
             )
-            self._jitted[sig] = (jax.jit(sharded), specs)
+            self._jitted[sig] = (jax.jit(sharded, **self._donate), specs)
         fn, specs = self._jitted[sig]
         args = simulator.Scenario(**{
             name: leaf if leaf is None else jax.device_put(

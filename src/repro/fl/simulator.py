@@ -30,6 +30,13 @@ All three default to the static behavior (None / rank-2 ``link_eps``), in
 which case `run_scenario` traces the EXACT pre-dynamic program — static
 scenarios stay bit-identical.
 
+Static compute knobs (DESIGN.md §9): `SimConfig.agg_impl` selects the
+aggregation substrate (jnp reference vs the fused/batched Pallas kernel;
+auto = native Pallas on TPU only), `eval_every=k` thins per-round metric
+evaluation to every k-th round (static ``(n_rounds // k,)`` metric axis;
+the trained trajectory is bitwise unchanged), and `track_bias=False`
+drops the R&A ||Lambda||^2 diagnostic from the hot loop.
+
 The simulator is model-agnostic: pass any (init, apply) pair from
 `repro.models.smallnets` (or a closure).
 
@@ -88,6 +95,11 @@ class SimConfig:
     aayg_mixes: int = 1           # J
     cfl_aggregator: int = 6       # paper: node 7 (index 6)
     seed: int = 0
+    # Static compute knobs (DESIGN.md §9) — they change the compiled
+    # program, not the trained trajectory:
+    agg_impl: str = "auto"        # auto | jnp | pallas (aggregation substrate)
+    eval_every: int = 1           # evaluate acc/loss every k-th round
+    track_bias: bool = True       # False: skip the R&A bias diagnostic
 
     @property
     def packet_len_bits(self) -> int:
@@ -295,6 +307,9 @@ def build_sim(
     local_epochs: int,
     n_rounds: int,
     aayg_mixes: int = 1,
+    agg_impl: str = "auto",
+    eval_every: int = 1,
+    track_bias: bool = True,
 ) -> SimPrograms:
     """Bind data + statics into the pure scenario programs.
 
@@ -308,10 +323,28 @@ def build_sim(
       local_epochs: I full-batch GD epochs per round (static).
       n_rounds: scan length of `run_scenario` (static).
       aayg_mixes: J one-hop mix iterations for AaYG (static).
+      agg_impl: aggregation substrate (auto | jnp | pallas — resolved once
+        here; see `core.aggregation.apply_mode` / DESIGN.md §9).
+      eval_every: evaluate test accuracy / train loss only every k-th round
+        (must divide ``n_rounds``).  `run_scenario` metrics then carry a
+        static ``(n_rounds // k,)`` leading axis for acc/loss — row j is
+        round ``(j + 1) * k - 1`` — while ``bias`` stays per-round; grids
+        batch exactly as before.  ``k=1`` traces the EXACT per-round
+        program (bit-identity).
+      track_bias: False skips the R&A ||Lambda||^2 diagnostic (bias is NaN
+        for every round; its mask reductions leave the compiled hot loop).
 
     Returns:
       `SimPrograms` with `round_step` / `run_scenario` pure functions.
     """
+    from repro.core import aggregation
+
+    if eval_every < 1 or n_rounds % eval_every:
+        raise ValueError(
+            f"eval_every={eval_every} must be >= 1 and divide "
+            f"n_rounds={n_rounds} (metrics keep a static shape)"
+        )
+    agg_impl = aggregation.resolve_impl(agg_impl)
     n = data.n_clients
     p = jnp.asarray(data.weights())
     xs, ys = _pad_shards(data)
@@ -369,22 +402,8 @@ def build_sim(
 
         return jax.vmap(one)(stacked, xs, ys)
 
-    def round_step(state: dict, rng: jax.Array, scenario: Scenario):
-        """One pure D-FL round: local training + traced-protocol exchange.
-
-        state: {"params": client-stacked pytree}; rng: this round's key.
-        ``scenario`` must be a per-round view (rank-2 ``link_eps``; slice a
-        dynamic scenario with `Scenario.at_round` first).  A non-None
-        ``participation`` mask makes sampled-out clients skip local
-        training, contribute nothing to aggregation, and keep their
-        parameters untouched.
-        """
-        if jnp.ndim(scenario.link_eps) == 3:
-            raise ValueError(
-                "round_step takes a per-round scenario; slice a dynamic "
-                "scenario with scenario.at_round(t) (run_scenario does "
-                "this inside its scan)"
-            )
+    def _advance(state: dict, rng: jax.Array, scenario: Scenario):
+        """Train + exchange, NO metric evaluation: (state, bias)."""
         part = scenario.participation
         if part is not None:
             part = part[:n]
@@ -402,14 +421,36 @@ def build_sim(
             w_seg, p, scenario.rho, scenario.link_eps, rng,
             scenario.protocol_id, scenario.mode_id, scenario.aggregator,
             n_mixes=aayg_mixes, participation=part,
+            agg_impl=agg_impl, track_bias=track_bias,
         )
         stacked = protocols._from_segments(w_seg, spec, m_params)
+        return {"params": stacked}, bias
+
+    def round_step(state: dict, rng: jax.Array, scenario: Scenario):
+        """One pure D-FL round: local training + traced-protocol exchange.
+
+        state: {"params": client-stacked pytree}; rng: this round's key.
+        ``scenario`` must be a per-round view (rank-2 ``link_eps``; slice a
+        dynamic scenario with `Scenario.at_round` first).  A non-None
+        ``participation`` mask makes sampled-out clients skip local
+        training, contribute nothing to aggregation, and keep their
+        parameters untouched.  Always evaluates its metrics — `run_scenario`
+        thins evaluation (``eval_every``) by scanning `_advance` between
+        measure points instead.
+        """
+        if jnp.ndim(scenario.link_eps) == 3:
+            raise ValueError(
+                "round_step takes a per-round scenario; slice a dynamic "
+                "scenario with scenario.at_round(t) (run_scenario does "
+                "this inside its scan)"
+            )
+        state, bias = _advance(state, rng, scenario)
         metrics = {
-            "acc": evaluate(stacked),
-            "loss": train_loss(stacked),
+            "acc": evaluate(state["params"]),
+            "loss": train_loss(state["params"]),
             "bias": bias,
         }
-        return {"params": stacked}, metrics
+        return state, metrics
 
     def run_scenario(scenario: Scenario) -> dict:
         scenario = scenario.prepare()
@@ -419,32 +460,68 @@ def build_sim(
         stacked = jax.tree.map(
             lambda leaf: jnp.broadcast_to(leaf[None], (n,) + leaf.shape), params0
         )
+        dynamic = scenario.is_dynamic
 
-        if not scenario.is_dynamic:
-            # Static scenario: the EXACT pre-dynamic trace (bit-identity).
-            def body(carry, _):
+        if eval_every == 1:
+            if not dynamic:
+                # Static scenario: the EXACT pre-dynamic trace (bit-identity).
+                def body(carry, _):
+                    state, key = carry
+                    key, k_round = jax.random.split(key)
+                    state, metrics = round_step(state, k_round, scenario)
+                    return (state, key), metrics
+
+                _, metrics = jax.lax.scan(
+                    body, ({"params": stacked}, key), None, length=n_rounds
+                )
+                return metrics
+
+            # Dynamic scenario: scan over the round index, slicing
+            # time-leaved fields per round.  The RNG split order matches the
+            # static path, so a T=1 schedule (or an all-ones mask)
+            # reproduces it exactly.
+            def body_dyn(carry, t):
                 state, key = carry
                 key, k_round = jax.random.split(key)
-                state, metrics = round_step(state, k_round, scenario)
+                state, metrics = round_step(state, k_round,
+                                            scenario.at_round(t))
                 return (state, key), metrics
 
             _, metrics = jax.lax.scan(
-                body, ({"params": stacked}, key), None, length=n_rounds
+                body_dyn, ({"params": stacked}, key), jnp.arange(n_rounds)
             )
             return metrics
 
-        # Dynamic scenario: scan over the round index, slicing time-leaved
-        # fields per round.  The RNG split order matches the static path,
-        # so a T=1 schedule (or an all-ones mask) reproduces it exactly.
-        def body_dyn(carry, t):
+        # Eval-thinned loop (eval_every = k > 1): an outer scan over
+        # n_rounds//k chunks, each advancing k exchange rounds (inner scan,
+        # same per-round RNG split order as the k=1 paths — the trained
+        # trajectory is identical) and evaluating ONCE at the chunk end.
+        # acc/loss carry a static (n_rounds//k, ...) axis; bias stays
+        # per-round ((n_rounds//k, k) stacked, flattened below).
+        def inner(carry, t):
             state, key = carry
             key, k_round = jax.random.split(key)
-            state, metrics = round_step(state, k_round, scenario.at_round(t))
-            return (state, key), metrics
+            state, bias = _advance(
+                state, k_round, scenario.at_round(t) if dynamic else scenario
+            )
+            return (state, key), bias
+
+        def chunk(carry, c):
+            carry, biases = jax.lax.scan(
+                inner, carry, c * eval_every + jnp.arange(eval_every)
+            )
+            state, _ = carry
+            return carry, {
+                "acc": evaluate(state["params"]),
+                "loss": train_loss(state["params"]),
+                "bias": biases,
+            }
 
         _, metrics = jax.lax.scan(
-            body_dyn, ({"params": stacked}, key), jnp.arange(n_rounds)
+            chunk, ({"params": stacked}, key),
+            jnp.arange(n_rounds // eval_every),
         )
+        metrics["bias"] = metrics["bias"].reshape(-1)     # (n_rounds,)
         return metrics
 
     return SimPrograms(
@@ -453,6 +530,19 @@ def build_sim(
         n_clients=n,
         n_rounds=n_rounds,
     )
+
+
+def donate_kwargs() -> dict:
+    """`jax.jit` kwargs donating the scenario argument (argnum 0).
+
+    The dispatched scenario batch — and with it the (G, ...) link/rho
+    stacks feeding the (G, N, L, K) round-loop state — is consumed by
+    exactly one dispatch (grid leaves live host-side and are re-transferred
+    per call), so its device buffers can be donated to the outputs instead
+    of double-buffering.  CPU does not implement donation (XLA warns every
+    dispatch), so this resolves to no-op kwargs there.
+    """
+    return {} if jax.default_backend() == "cpu" else {"donate_argnums": 0}
 
 
 def metrics_to_result(metrics: dict) -> SimResult:
@@ -475,8 +565,12 @@ def run(
         init_fn, apply_fn, data,
         seg_len=cfg.seg_len, local_epochs=cfg.local_epochs,
         n_rounds=cfg.n_rounds, aayg_mixes=cfg.aayg_mixes,
+        agg_impl=cfg.agg_impl, eval_every=cfg.eval_every,
+        track_bias=cfg.track_bias,
     )
-    metrics = jax.jit(sim.run_scenario)(make_scenario(net, cfg))
+    metrics = jax.jit(sim.run_scenario, **donate_kwargs())(
+        make_scenario(net, cfg)
+    )
     return metrics_to_result(metrics)
 
 

@@ -1,28 +1,45 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-On this CPU container the kernels run in interpret mode (the kernel body
-executes in Python, validating semantics); on TPU set
-``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile natively.
+Interpret-mode selection: ``REPRO_PALLAS_INTERPRET=0/1`` forces native/
+interpret lowering; unset, kernels compile natively on TPU and fall back to
+interpret mode elsewhere (the kernel body executes in Python on CPU,
+validating semantics).  `repro.core.aggregation.apply_mode` routes the
+simulator's aggregation through `ra_aggregate` when the ``pallas`` substrate
+is selected (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import os
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ra_aggregate as _ra
 from repro.kernels import rwkv6_scan as _rwkv
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+# Tri-state: True/False when the env var decides, None -> backend default.
+_RAW = os.environ.get("REPRO_PALLAS_INTERPRET")
+INTERPRET: bool | None = None if _RAW is None else _RAW != "0"
 
 
-def ra_aggregate(w_seg, p, e, *, block_l: int = 8, interpret: bool | None = None):
-    """Fused adaptive-normalized aggregation (paper eq. 6).
+def interpret_default() -> bool:
+    """Resolved interpret flag: env override, else native only on TPU."""
+    if INTERPRET is not None:
+        return INTERPRET
+    return jax.default_backend() != "tpu"
 
-    w_seg: (N, L, K); p: (N,); e: (N, N, L) -> (N, L, K).
+
+def ra_aggregate(w_seg, p, e, *, mode: str = "ra_normalized",
+                 block_l: int = 8, interpret: bool | None = None):
+    """Fused R&A aggregation (paper eq. 6 / fused substitution baseline).
+
+    w_seg: (N, L, K) or batched (B, N, L, K); p: (N,)/(B, N);
+    e: (N, N, L)/(B, N, N, L) in bool_/uint8/float32 -> same rank as w_seg.
+    `jax.vmap` over a grid axis lowers onto the batched kernel.
     """
-    it = INTERPRET if interpret is None else interpret
-    return _ra.ra_aggregate(w_seg, p, e, block_l=block_l, interpret=it)
+    it = interpret_default() if interpret is None else interpret
+    return _ra.ra_aggregate(w_seg, p, e, mode=mode, block_l=block_l,
+                            interpret=it)
 
 
 def rwkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
@@ -30,7 +47,7 @@ def rwkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None)
 
     r/k/v/w: (B, S, H, D); u: (H, D) -> (B, S, H, D).
     """
-    it = INTERPRET if interpret is None else interpret
+    it = interpret_default() if interpret is None else interpret
     return _rwkv.rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=it)
 
 
@@ -42,7 +59,7 @@ def flash_attention(q, k, v, *, scale, causal=True, block_q=128, block_k=128,
     """
     from repro.kernels import flash_attention as _fa
 
-    it = INTERPRET if interpret is None else interpret
+    it = interpret_default() if interpret is None else interpret
     return _fa.flash_attention_fwd(q, k, v, scale=scale, causal=causal,
                                    block_q=block_q, block_k=block_k,
                                    interpret=it)

@@ -1,21 +1,38 @@
-"""Pallas TPU kernel: R&A adaptive-normalized segment aggregation (eq. 6).
+"""Pallas TPU kernel: R&A segment aggregation (eq. 6), both modes, batched.
 
-The paper's aggregation hot spot: for every receiver n and segment l,
-    out[n, l] = sum_m p_m e[m,n,l] w[m,l] / sum_m p_m e[m,n,l].
+The paper's aggregation hot spot, for every receiver n and segment l:
+
+  * ``ra_normalized`` (eq. 6, adaptive normalization):
+        out[n, l] = sum_m p_m e[m,n,l] w[m,l] / sum_m p_m e[m,n,l]
+  * ``substitution`` (baseline [12], fused):
+        out[n, l] = sum_m p_m e[m,n,l] w[m,l]
+                    + (sum_m p_m (1 - e[m,n,l])) * w[n,l]
 
 Naive jnp materializes the (N, N, L) coefficient tensor and an einsum over
 N x L x K in HBM.  On TPU the op is memory-bound (one pass over N copies of
 the model), so the kernel streams (L, K)-tiles of every sender's segments
-through VMEM and fuses mask-weighting, reduction, and renormalization in a
-single pass — the receiver axis is the grid's outer dimension, the segment
-axis is tiled.
+through VMEM and fuses mask-weighting, reduction, and renormalization (or
+own-segment substitution) in a single pass — the receiver axis and an
+optional leading batch axis are grid dimensions, the segment axis is tiled.
 
-Tiling: block (BL segments x K values) per sender; K is the packet payload
-(aligned to 128 lanes by the wrapper); BL chosen so N * BL * K * 4B fits
-comfortably in VMEM (~16 MB).
+Batching: the public `ra_aggregate` accepts rank-3 ``w_seg`` (one scenario)
+or rank-4 (a leading batch axis, folded into the Pallas grid), and carries a
+`jax.custom_batching.custom_vmap` rule so `jax.vmap` over a scenario-grid
+axis — including the vmap inside `scenarios.run_grid` / its `shard_map`
+wrapper — lowers onto the batched kernel instead of falling off it.  Nested
+vmaps flatten into the same single batch grid dimension.
 
-The mask e is passed as float32 (0/1) — (N, N, L) is tiny relative to the
-segments (K >= 128), so it rides along each grid step.
+Tiling: block (BL segments x K values) per sender; K is the packet payload;
+BL chosen so N * BL * K * 4B fits comfortably in VMEM (~16 MB).  L is padded
+UP to a multiple of ``block_l`` (padded segments carry an all-zero mask and
+are sliced off the output) — never the block shrunk to a divisor, which for
+prime L (e.g. L=1181) would degenerate to BL=1 and serialize the segment
+axis.
+
+The mask ``e`` may arrive as bool_/uint8 (the packed on-the-wire form —
+see `errors.sample_success`) or float32; it is cast to float32 exactly once
+at the kernel edge, so kernel semantics match the float32 reference
+bit-for-bit in value.
 """
 from __future__ import annotations
 
@@ -25,63 +42,189 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+MODES = ("ra_normalized", "substitution")
+
 
 def _ra_kernel(p_ref, e_ref, w_ref, out_ref):
-    """One grid step: receiver block x segment block.
+    """One grid step of adaptive normalization: (batch, receiver, seg block).
 
     Block views:
-      p_ref:   (N, 1)        aggregation weights (replicated per step)
-      e_ref:   (1, N, BL)    success mask column for THIS receiver
-      w_ref:   (N, BL, K)    sender segments for this segment block
-      out_ref: (1, BL, K)    aggregated output for (receiver, segment block)
+      p_ref:   (1, N)           aggregation weights (replicated per step)
+      e_ref:   (1, 1, N, BL)    success-mask column for THIS receiver
+      w_ref:   (1, N, BL, K)    sender segments for this segment block
+      out_ref: (1, 1, BL, K)    aggregated output
     """
-    p = p_ref[:, 0]                                   # (N,)
-    e = e_ref[0]                                      # (N, BL)
-    w = w_ref[...]                                    # (N, BL, K)
+    p = p_ref[0]                                      # (N,)
+    e = e_ref[0, 0].astype(jnp.float32)               # (N, BL)
+    w = w_ref[0].astype(jnp.float32)                  # (N, BL, K)
     coeff = p[:, None] * e                            # (N, BL)
     denom = jnp.maximum(jnp.sum(coeff, axis=0), 1e-12)  # (BL,)
-    num = jnp.sum(coeff[:, :, None] * w.astype(jnp.float32), axis=0)  # (BL, K)
-    out_ref[0] = (num / denom[:, None]).astype(out_ref.dtype)
+    num = jnp.sum(coeff[:, :, None] * w, axis=0)      # (BL, K)
+    out_ref[0, 0] = (num / denom[:, None]).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def _ra_kernel_sub(p_ref, e_ref, w_ref, own_ref, out_ref):
+    """One grid step of fused model substitution.
+
+    Extra block view:
+      own_ref: (1, 1, BL, K)    the RECEIVER's own segments for this block
+    The lost-sender mass sum_m p_m (1 - e) folds to sum(p) - sum(coeff), so
+    no (1 - e) tensor is ever built.
+    """
+    p = p_ref[0]
+    e = e_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    own = own_ref[0, 0].astype(jnp.float32)           # (BL, K)
+    coeff = p[:, None] * e
+    num = jnp.sum(coeff[:, :, None] * w, axis=0)
+    miss = jnp.sum(p) - jnp.sum(coeff, axis=0)        # (BL,)
+    out_ref[0, 0] = (num + miss[:, None] * own).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_l", "interpret"))
+def _ra_call(w_seg, p, e, *, mode, block_l, interpret):
+    """The batched pallas_call: w_seg (B, N, L, K), p (B, N), e (B, N, N, L).
+
+    The leading batch axis is a grid dimension — grid (B, N, ceil(L/BL)).
+    """
+    b, n, l, k = w_seg.shape
+    bl = min(block_l, l)
+    lp = -(-l // bl) * bl
+    # e arranged receiver-major for clean blocking: (B, receiver, sender, L).
+    # The mask keeps its packed dtype through HBM; each kernel step casts
+    # only its (N, BL) block to float32 in VMEM.
+    e_rm = jnp.swapaxes(e, 1, 2)
+    if lp != l:
+        # Pad L UP to a block multiple (zero mask + zero segments: the padded
+        # tail is sliced off below) instead of shrinking BL to a divisor.
+        w_seg = jnp.pad(w_seg, ((0, 0), (0, 0), (0, lp - l), (0, 0)))
+        e_rm = jnp.pad(e_rm, ((0, 0), (0, 0), (0, 0), (0, lp - l)))
+    grid = (b, n, lp // bl)
+    p2 = p.astype(jnp.float32)
+
+    in_specs = [
+        pl.BlockSpec((1, n), lambda bi, r, s: (bi, 0)),             # p
+        pl.BlockSpec((1, 1, n, bl), lambda bi, r, s: (bi, r, 0, s)),  # e
+        pl.BlockSpec((1, n, bl, k), lambda bi, r, s: (bi, 0, s, 0)),  # w
+    ]
+    args = [p2, e_rm, w_seg]
+    if mode == "substitution":
+        kernel = _ra_kernel_sub
+        # The receiver's own segment block (same array, receiver-indexed).
+        in_specs.append(
+            pl.BlockSpec((1, 1, bl, k), lambda bi, r, s: (bi, r, s, 0))
+        )
+        args.append(w_seg)
+    else:
+        kernel = _ra_kernel
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, bl, k), lambda bi, r, s: (bi, r, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, lp, k), w_seg.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:, :, :l] if lp != l else out
+
+
+def _broadcast_unbatched(axis_size, in_batched, args):
+    """Give every unbatched arg the leading batch axis of the batched ones."""
+    return tuple(
+        arg if batched
+        else jnp.broadcast_to(arg[None], (axis_size,) + arg.shape)
+        for batched, arg in zip(in_batched, args)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_fn(mode: str, block_l: int, interpret: bool):
+    """The rank-4 entry point, with a vmap rule that FOLDS any further batch
+    axis into the existing one (so arbitrarily nested vmaps stay on the
+    kernel: each nesting level flattens into the single batch grid dim)."""
+
+    @jax.custom_batching.custom_vmap
+    def fnb(w_seg, p, e):
+        return _ra_call(w_seg, p, e, mode=mode, block_l=block_l,
+                        interpret=interpret)
+
+    @fnb.def_vmap
+    def _rule(axis_size, in_batched, w_seg, p, e):  # noqa: ANN001
+        w_seg, p, e = _broadcast_unbatched(axis_size, in_batched,
+                                           (w_seg, p, e))
+        inner = w_seg.shape[1]
+        flat = fnb(
+            w_seg.reshape((axis_size * inner,) + w_seg.shape[2:]),
+            p.reshape((axis_size * inner,) + p.shape[2:]),
+            e.reshape((axis_size * inner,) + e.shape[2:]),
+        )
+        return flat.reshape((axis_size, inner) + flat.shape[1:]), True
+
+    return fnb
+
+
+@functools.lru_cache(maxsize=None)
+def _scalar_fn(mode: str, block_l: int, interpret: bool):
+    """The rank-3 (single scenario) entry point; its vmap rule routes to the
+    batched kernel with the batch axis folded into the Pallas grid."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(w_seg, p, e):
+        return _ra_call(w_seg[None], p[None], e[None], mode=mode,
+                        block_l=block_l, interpret=interpret)[0]
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, w_seg, p, e):  # noqa: ANN001
+        w_seg, p, e = _broadcast_unbatched(axis_size, in_batched,
+                                           (w_seg, p, e))
+        return _batched_fn(mode, block_l, interpret)(w_seg, p, e), True
+
+    return fn
+
+
 def ra_aggregate(
     w_seg: jnp.ndarray,
     p: jnp.ndarray,
     e: jnp.ndarray,
     *,
+    mode: str = "ra_normalized",
     block_l: int = 8,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Fused R&A aggregation. See ref.ra_aggregate_ref for semantics.
 
     Args:
-      w_seg: (N, L, K) float32/bf16 client-stacked segments.
-      p:     (N,) float32 weights.
-      e:     (N, N, L) float32 0/1 success mask (sender, receiver, segment).
-      block_l: segments per VMEM tile.
+      w_seg: (N, L, K) — or (B, N, L, K) batched — float32/bf16 segments.
+      p:     (N,) / (B, N) float32 weights.
+      e:     (N, N, L) / (B, N, N, L) success mask (sender, receiver,
+             segment); bool_/uint8/float32 accepted (one cast at the edge).
+      mode: "ra_normalized" (eq. 6) or "substitution" (fused baseline [12]).
+      block_l: segments per VMEM tile (L pads up to a multiple).
       interpret: run in Pallas interpret mode (CPU validation; TPU: False).
+
+    `jax.vmap` over a leading axis of any argument lowers onto the batched
+    kernel (custom_vmap rule) — the grid engine's vmap/shard_map included.
     """
-    n, l, k = w_seg.shape
-    assert e.shape == (n, n, l), e.shape
-    bl = min(block_l, l)
-    if l % bl:
-        bl = next(c for c in range(bl, 0, -1) if l % c == 0)
-    grid = (n, l // bl)
-
-    # e arranged receiver-major for clean blocking: (receiver, sender, L).
-    e_rm = jnp.swapaxes(e, 0, 1).astype(jnp.float32)
-    p2 = p.astype(jnp.float32)[:, None]
-
-    return pl.pallas_call(
-        _ra_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((n, 1), lambda r, s: (0, 0)),          # p
-            pl.BlockSpec((1, n, bl), lambda r, s: (r, 0, s)),   # e (this recv)
-            pl.BlockSpec((n, bl, k), lambda r, s: (0, s, 0)),   # w segments
-        ],
-        out_specs=pl.BlockSpec((1, bl, k), lambda r, s: (r, s, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, l, k), w_seg.dtype),
-        interpret=interpret,
-    )(p2, e_rm, w_seg)
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if w_seg.ndim == 4:
+        b, n, l, _ = w_seg.shape
+        if p.ndim == 1:   # shared weights across the batch
+            p = jnp.broadcast_to(p[None], (b,) + p.shape)
+        if e.ndim == 3:   # shared mask across the batch
+            e = jnp.broadcast_to(e[None], (b,) + e.shape)
+        if p.shape != (b, n) or e.shape != (b, n, n, l):
+            raise ValueError(
+                f"batched ra_aggregate: w_seg {w_seg.shape} needs p "
+                f"(N,)/(B, N) and e (N, N, L)/(B, N, N, L); got p {p.shape}, "
+                f"e {e.shape}"
+            )
+        return _batched_fn(mode, block_l, bool(interpret))(w_seg, p, e)
+    n, l, _ = w_seg.shape
+    if p.shape != (n,) or e.shape != (n, n, l):
+        raise ValueError(
+            f"ra_aggregate: w_seg {w_seg.shape} needs p (N,) and e "
+            f"(N, N, L); got p {p.shape}, e {e.shape}"
+        )
+    return _scalar_fn(mode, block_l, bool(interpret))(w_seg, p, e)

@@ -2,6 +2,8 @@
 
   * ra_aggregate_ref — the paper's adaptive-normalized segment aggregation
     (eq. 6) over client-stacked segment tensors.
+  * ra_substitution_ref — the model-substitution baseline [12] (the fused
+    `substitution`-mode oracle for the Pallas kernel).
   * rwkv6_scan_ref   — rwkv6 data-dependent-decay linear attention
     (sequential token recurrence; ground truth for the chunked kernel).
 """
@@ -23,10 +25,23 @@ def ra_aggregate_ref(w_seg: jnp.ndarray, p: jnp.ndarray, e: jnp.ndarray) -> jnp.
       (N, L, K) receiver-major aggregated segments:
         out[n, l] = sum_m p_m e[m,n,l] w[m,l] / sum_m p_m e[m,n,l]
     """
-    w = p[:, None, None] * e                        # (N, N, L)
+    w = p[:, None, None] * e.astype(jnp.float32)    # (N, N, L)
     denom = jnp.maximum(jnp.sum(w, axis=0), 1e-12)  # (N, L)
     num = jnp.einsum("mnl,mlk->nlk", w, w_seg.astype(jnp.float32))
     return (num / denom[:, :, None]).astype(w_seg.dtype)
+
+
+def ra_substitution_ref(w_seg: jnp.ndarray, p: jnp.ndarray,
+                        e: jnp.ndarray) -> jnp.ndarray:
+    """Model-substitution baseline [12] over segments.
+
+    out[n, l] = sum_m p_m (e[m,n,l] w[m,l] + (1 - e[m,n,l]) w[n,l])
+    """
+    ef = e.astype(jnp.float32)
+    wf = w_seg.astype(jnp.float32)
+    recv = jnp.einsum("mnl,mlk->nlk", p[:, None, None] * ef, wf)
+    miss = jnp.einsum("mnl->nl", p[:, None, None] * (1.0 - ef))  # (N, L)
+    return (recv + miss[:, :, None] * wf).astype(w_seg.dtype)
 
 
 def rwkv6_scan_ref(r, k, v, w, u):
