@@ -1,0 +1,81 @@
+"""Closed-loop selection sweep: sampling policy x mobility churn.
+
+The paper fixes WHO participates (everyone) and WHERE models travel
+(min-PER routes on a fixed topology).  This benchmark sweeps the two
+closed-loop axes the scenario engine grew in DESIGN.md §10:
+
+  * sampling policy — uniform / loss-proportional / gradient-norm /
+                      bandwidth-aware admission (`core.selection`), the
+                      per-round mask computed INSIDE the round scan from
+                      live signals;
+  * mobility churn  — random-waypoint walks (`topology.
+                      mobility_link_schedule`) at increasing step sizes:
+                      consecutive rounds are CORRELATED, so routing and
+                      the bandwidth policy's admission scores track a
+                      drifting network rather than i.i.d. noise.
+
+The full (mobility x policy) cross runs as ONE batched `run_grid`
+dispatch — policies dispatch by a traced `lax.switch`, mobility schedules
+are plain (T, V, V) data; `REPRO_GRID_DEVICES=k` shards it.  Emits CSV
+rows plus machine-readable `BENCH_selection.json` (`common.write_bench`):
+per-scenario final accuracy, realized participation fraction, and the
+one-dispatch wall clock.
+"""
+import time
+
+from benchmarks import common
+from repro.core import topology
+from repro.fl import scenarios
+
+MOBILITY_STEPS_M = (0.0, 250.0, 1000.0)   # meters per round (0 = static)
+POLICIES = (
+    ("uniform", "uniform", 1.0),
+    ("loss50", "loss", 0.5),
+    ("grad50", "grad_norm", 0.5),
+    ("bw50", "bandwidth", 0.5),
+)
+N_ROUNDS = 12
+
+
+def build_grid() -> scenarios.ScenarioGrid:
+    net = common.standard_net(packet_len_bits=25_000,
+                              tx_power_dbm=common.HARSH_TX_DBM)
+    schedules = [
+        (f"mob{step:g}",
+         topology.mobility_link_schedule(net, N_ROUNDS, step_m=step, seed=17))
+        for step in MOBILITY_STEPS_M
+    ]
+    return scenarios.ScenarioGrid.product(
+        schedules=schedules,
+        protocols=[("ra", "ra_normalized")],
+        sampling_policies=list(POLICIES),
+    )
+
+
+def main() -> None:
+    grid = build_grid()
+    t0 = time.time()
+    res = common.run_standard_grid(grid, n_rounds=N_ROUNDS)
+    t_total = time.time() - t0
+    us = t_total * 1e6 / len(grid)
+    rows = []
+    for i, (label, one) in enumerate(res.items()):
+        frac = float(res.selected_frac[i].mean())
+        acc = float(one.mean_acc[-1])
+        common.emit(f"fig_selection/{label}", us,
+                    f"final_acc={acc:.3f};selected_frac={frac:.2f}")
+        rows.append({"name": label, "us_per_call": us, "final_acc": acc,
+                     "selected_frac": frac})
+    rows.append({
+        "name": "timing", "us_per_call": t_total * 1e6,
+        "scenarios": len(grid), "one_dispatch_s": round(t_total, 2),
+        "rounds": N_ROUNDS,
+    })
+    common.emit("fig_selection/timing", t_total * 1e6,
+                f"scenarios={len(grid)};one_dispatch_s={t_total:.2f};"
+                f"rounds={N_ROUNDS}")
+    common.write_bench("selection", rows)
+
+
+if __name__ == "__main__":
+    main()

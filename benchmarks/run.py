@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig9   — routing-only relay nodes (paper Fig. 9)
   fig10  — aggregation-coefficient distributions (paper Fig. 10)
   fig_dynamic — link-churn x client-sampling sweep (DESIGN.md §8)
+  fig_selection — sampling policy x mobility churn (DESIGN.md §10)
   kernel — Pallas kernels vs references
   roofline — dry-run derived roofline table (DESIGN.md §Roofline)
 """
@@ -18,8 +19,8 @@ import sys
 import traceback
 
 MODULES = ["fig2_protocols", "fig3_sweep", "table3_overhead", "fig8_bias",
-           "fig9_relays", "fig10_coeffs", "fig_dynamic", "kernel_bench",
-           "roofline"]
+           "fig9_relays", "fig10_coeffs", "fig_dynamic", "fig_selection",
+           "kernel_bench", "roofline"]
 
 
 def main() -> None:

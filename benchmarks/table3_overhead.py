@@ -1,31 +1,58 @@
-"""Table III: TDMA slots + total traffic per round, per protocol/density."""
+"""Table III: TDMA slots + total traffic per round, per protocol/density.
+
+Also surfaces the Section-IV bandwidth-constrained variant: R&A with only
+the top-k admitted homologous route-sets (`routing.admit_homologous_routes`
+priority, `routing.admitted_rho_mask` channel view) — the open-loop twin of
+the closed-loop ``bandwidth`` selection policy (DESIGN.md §10).
+"""
 import numpy as np
 
 from benchmarks import common
 from repro.core import overhead, routing, topology
+
+ADMIT_CAP = 5      # bandwidth-constrained rows: top-5 admitted sources
 
 
 def main() -> None:
     # paper's model sizes in Mbits (Sec. V-A.1)
     models_mbits = {"cnn": 38.72, "resnet18": 374.08, "resnet56": 18.92,
                     "rnn": 27.73}
+    p = np.full(10, 0.1)
     for density in (0.35, 0.5, 0.8):
         net = topology.paper_network(edge_density=density)
         rho, nxt = routing.e2e_success(net.link_eps)
         nxt = np.asarray(nxt)
         adj = np.asarray(net.adjacency)
+        admitted = routing.admit_homologous_routes(
+            p, np.asarray(rho), n_clients=10, max_admitted=ADMIT_CAP
+        )
+        # The admitted channel: non-admitted source rows carry no routes.
+        rho_cap = routing.admitted_rho_mask(
+            p, np.asarray(rho), n_clients=10, max_admitted=ADMIT_CAP
+        )
+        dropped = float(1.0 - rho_cap.sum() / np.asarray(rho).sum())
         for mname, mbits in models_mbits.items():
             ra = overhead.ra_overhead(nxt, 10, mbits)
+            rb = overhead.ra_overhead(nxt, 10, mbits, sources=admitted)
             a1 = overhead.aayg_overhead(adj, 10, mbits, 1)
             a5 = overhead.aayg_overhead(adj, 10, mbits, 5)
             cf = overhead.cfl_overhead(nxt, 10, mbits, 6)
             common.emit(
                 f"table3/rho{density}/{mname}", 0.0,
                 f"RA_slots={ra.n_slots};RA_Mbits={ra.traffic_mbits:.0f};"
+                f"RAadm{ADMIT_CAP}_slots={rb.n_slots};"
+                f"RAadm{ADMIT_CAP}_Mbits={rb.traffic_mbits:.0f};"
                 f"AaYG1_slots={a1.n_slots};AaYG1_Mbits={a1.traffic_mbits:.0f};"
                 f"AaYG5_slots={a5.n_slots};AaYG5_Mbits={a5.traffic_mbits:.0f};"
                 f"CFL_slots={cf.n_slots};CFL_Mbits={cf.traffic_mbits:.0f}",
             )
+        common.emit(
+            f"table3/rho{density}/admission", 0.0,
+            # '|'-joined: a Python list repr would put commas inside the
+            # CSV derived column.
+            f"admitted={'|'.join(map(str, admitted))};"
+            f"rho_mass_dropped={dropped:.2f}",
+        )
 
 
 if __name__ == "__main__":

@@ -7,5 +7,6 @@ from repro.core import (  # noqa: F401
     overhead,
     protocols,
     routing,
+    selection,
     topology,
 )

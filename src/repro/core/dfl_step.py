@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import aggregation
 from repro.core import errors as err
+from repro.core import selection
 
 Pytree = Any
 
@@ -46,6 +48,7 @@ def ra_exchange(
     axis: str,
     seg_len: int,
     comm: str = "all_to_all",
+    participation: jnp.ndarray | None = None,
 ) -> Pytree:
     """R&A aggregation across mesh axis `axis`. Call INSIDE shard_map.
 
@@ -58,6 +61,11 @@ def ra_exchange(
       axis: mesh axis name enumerating clients.
       seg_len: K values per segment.
       comm: 'all_to_all' (routed-unicast analogue) or 'psum'.
+      participation: optional (N,) replicated sampling mask (DESIGN.md §10):
+        sampled-out clients are removed as senders from the shared success
+        mask (`aggregation.mask_senders` — every client derives the same
+        masked tensor, still no mask communication) and keep their own
+        parameters as receivers.  None traces the exact unmasked program.
     """
     # p is replicated with one weight per client on the axis, so its static
     # shape is the axis size (jax.lax.axis_size is unavailable on jax 0.4.x).
@@ -72,7 +80,10 @@ def ra_exchange(
 
     # Shared-key mask: every client computes the same (N, N, L) tensor
     # (sampled packed; cast once here — this path's aggregation boundary).
-    e = err.sample_success(key, rho, l, n_clients=n).astype(jnp.float32)
+    e = err.sample_success(key, rho, l, n_clients=n)
+    if participation is not None:
+        e = aggregation.mask_senders(e, participation[:n])
+    e = e.astype(jnp.float32)
 
     p_me = jax.lax.dynamic_index_in_dim(p, me, keepdims=False)
     e_from_me = jax.lax.dynamic_index_in_dim(e, me, axis=0, keepdims=False)  # (N, L)
@@ -104,6 +115,10 @@ def ra_exchange(
     denom = jnp.maximum(jnp.einsum("m,ml->l", p, e_to_me), 1e-12)          # (L,)
 
     out = (num / denom[:, None]).reshape(-1)[:m_params]
+    if participation is not None:
+        s_me = jax.lax.dynamic_index_in_dim(participation[:n], me,
+                                            keepdims=False)
+        out = jnp.where(s_me > 0, out, flat)   # sampled-out: keep own params
     return unravel(out)
 
 
@@ -115,6 +130,9 @@ def make_dfl_train_step(
     seg_len: int,
     n_local_steps: int = 1,
     comm: str = "all_to_all",
+    selection_policy: str | None = None,
+    select_frac: float = 0.5,
+    signal_fn: Callable[[Pytree], jnp.ndarray] | None = None,
 ):
     """Wrap an arch's train_step into a full R&A D-FL round.
 
@@ -122,16 +140,50 @@ def make_dfl_train_step(
     client's shard.  The returned function runs ``n_local_steps`` local steps
     (scanned), then the R&A exchange of the *parameters* (state.params by
     convention: state is a dict with a 'params' entry).
+
+    Closed-loop selection (DESIGN.md §10): with ``selection_policy`` set
+    (a `core.selection.POLICY_IDS` name), each round gathers the
+    per-client signals across the mesh axis — a scalar loss signal
+    (``signal_fn(metrics)``, default the mean of ``metrics["loss"]``) and
+    the true local update norm (this round's parameters before vs after
+    the local scan) — derives the participation mask with
+    `selection.select_clients` (deterministic and replicated, so every
+    client computes the SAME mask; the only extra communication is one
+    two-scalar all_gather), and threads it into `ra_exchange`.
     """
+    policy_id = (None if selection_policy is None
+                 else selection.POLICY_IDS[selection_policy])
+    if signal_fn is None:
+        signal_fn = lambda metrics: jnp.mean(metrics["loss"])
 
     def dfl_round(state: dict, batches: Pytree, rho: jnp.ndarray, key: jax.Array):
         def body(st, batch):
             st, metrics = local_train_step(st, batch)
             return st, metrics
 
+        params_before = state["params"]
         state, metrics = jax.lax.scan(body, state, batches, length=n_local_steps)
+        part = None
+        if policy_id is not None:
+            n = p.shape[0]
+            loss_sig = jnp.asarray(signal_fn(metrics), jnp.float32)
+            upd_sq = sum(jax.tree.leaves(jax.tree.map(
+                lambda a, b: jnp.sum(jnp.square(a - b)),
+                state["params"], params_before,
+            )))
+            upd_sig = jnp.sqrt(upd_sq).astype(jnp.float32)
+            sig_vec = jax.lax.all_gather(
+                jnp.stack([loss_sig, upd_sig]), axis
+            )                                                   # (N, 2)
+            signals = selection.SelectionSignals(loss=sig_vec[:, 0],
+                                                 upd_norm=sig_vec[:, 1])
+            part = selection.select_clients(
+                jnp.asarray(policy_id, jnp.int32), jnp.ones((n,), jnp.float32),
+                signals, p, rho[:n, :n], jnp.asarray(select_frac, jnp.float32),
+            )
         new_params = ra_exchange(
-            state["params"], p, rho, key, axis=axis, seg_len=seg_len, comm=comm
+            state["params"], p, rho, key, axis=axis, seg_len=seg_len,
+            comm=comm, participation=part,
         )
         state = dict(state, params=new_params)
         return state, metrics

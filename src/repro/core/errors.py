@@ -98,7 +98,9 @@ def sample_success(
     Returns:
       e: (N, N, L) in {0, 1}.  e[n, n, :] == 1 (own model is local).
     """
-    n = n_clients or rho.shape[0]
+    # NOT `n_clients or ...`: the falsy guard silently mapped an explicit
+    # n_clients=0 (an empty client set) back to the full V-node mask.
+    n = rho.shape[0] if n_clients is None else n_clients
     r = rho[:n, :n]
     u = jax.random.uniform(key, (n, n, n_segments))
     e = u < r[:, :, None]

@@ -13,6 +13,7 @@ assignment is greedy edge coloring of the transmission conflict graph.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -28,9 +29,15 @@ class Overhead:
 
 def _greedy_slots(transmissions: list[tuple[int, int]]) -> int:
     """Greedy coloring: assign each (tx, rx) transmission the first slot in
-    which no already-scheduled transmission shares a node with it."""
+    which no already-scheduled transmission shares a node with it.
+
+    The input is SORTED first: greedy coloring is order-sensitive, so the
+    slot count must not depend on the (route-enumeration) order callers
+    happen to produce — Table-III numbers stay deterministic under any
+    permutation of the same transmission set.
+    """
     slots: list[set[int]] = []
-    for tx, rx in transmissions:
+    for tx, rx in sorted(transmissions):
         nodes = {tx, rx}
         for s in slots:
             if not (s & nodes):
@@ -52,10 +59,17 @@ def _route_transmissions(
     return txs
 
 
-def ra_overhead(next_hop: np.ndarray, n_clients: int, model_mbits: float) -> Overhead:
-    """R&A D-FL: every client pair exchanges along its min-PER route."""
+def ra_overhead(next_hop: np.ndarray, n_clients: int, model_mbits: float,
+                sources: Sequence[int] | None = None) -> Overhead:
+    """R&A D-FL: every client pair exchanges along its min-PER route.
+
+    ``sources`` restricts the scheduled route-sets to the given source
+    clients (the Section-IV bandwidth-constrained variant: pass
+    `routing.admit_homologous_routes(...)`); None schedules everyone.
+    """
+    srcs = range(n_clients) if sources is None else sources
     pairs = [
-        (m, n) for m in range(n_clients) for n in range(n_clients) if m != n
+        (m, n) for m in srcs for n in range(n_clients) if m != n
     ]
     txs = _route_transmissions(np.asarray(next_hop), n_clients, pairs)
     return Overhead(

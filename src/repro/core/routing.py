@@ -56,8 +56,21 @@ def floyd_warshall(cost: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def link_cost(link_eps: jnp.ndarray) -> jnp.ndarray:
-    """Edge weight -log(eps) (inf for missing / zero-quality links)."""
-    return jnp.where(link_eps > 0.0, -jnp.log(jnp.clip(link_eps, 1e-300, 1.0)), _INF)
+    """Edge weight -log(eps) (inf for missing / zero-quality links).
+
+    The clip floor is dtype-aware: a literal ``1e-300`` floor underflows to
+    0.0 in float32 (the simulator's working precision), silently turning
+    the clip into a no-op — a tiny-but-positive (subnormal) link quality
+    then reaches ``-log`` raw and a 0.0 one would blow up to ``inf`` inside
+    the guarded branch.  ``finfo(dtype).tiny`` is the smallest NORMAL
+    positive value, so the floor survives the cast in every precision.
+    """
+    link_eps = jnp.asarray(link_eps)
+    if not jnp.issubdtype(link_eps.dtype, jnp.floating):
+        link_eps = link_eps.astype(jnp.float32)   # 0/1 integer matrices
+    floor = jnp.finfo(link_eps.dtype).tiny
+    return jnp.where(link_eps > 0.0,
+                     -jnp.log(jnp.clip(link_eps, floor, 1.0)), _INF)
 
 
 @jax.jit
@@ -74,20 +87,34 @@ def e2e_success(link_eps: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 def reconstruct_route(next_hop: np.ndarray, src: int, dst: int,
                       max_hops: int | None = None) -> list[int]:
-    """Node sequence src -> ... -> dst from a next-hop matrix (host-side)."""
+    """Node sequence src -> ... -> dst from a next-hop matrix (host-side).
+
+    Returns ``[]`` when dst is unreachable.  `floyd_warshall` marks an
+    unreachable pair (i, j) with the sentinel ``next_hop[i, j] == i``; the
+    sentinel is checked at EVERY hop (an unreachable *intermediate* node
+    used to spin silently for max_hops iterations — its sentinel points at
+    itself, not at src), and a visited set guards against cycles in
+    hand-built / corrupted next-hop matrices.
+    """
     next_hop = np.asarray(next_hop)
     if src == dst:
         return [src]
-    max_hops = max_hops or next_hop.shape[0] + 1
+    if max_hops is None:
+        max_hops = next_hop.shape[0] + 1
     route = [src]
+    visited = {src}
     cur = src
     for _ in range(max_hops):
-        cur = int(next_hop[cur, dst])
-        route.append(cur)
-        if cur == dst:
-            return route
-        if cur == src:  # unreachable sentinel
+        nxt = int(next_hop[cur, dst])
+        if nxt == cur:          # unreachable sentinel (at any hop)
             return []
+        if nxt in visited:      # cycle: not a valid route
+            return []
+        route.append(nxt)
+        if nxt == dst:
+            return route
+        visited.add(nxt)
+        cur = nxt
     return []
 
 
@@ -109,6 +136,22 @@ def route_edges(route: list[int]) -> list[tuple[int, int]]:
 # ---------------------------------------------------------------------------
 # Bandwidth-constrained joint routing (Section IV, final paragraphs).
 # ---------------------------------------------------------------------------
+def admission_scores(p, rho):
+    """Section-IV admission priority: ``(p_m^2 + p_m) * sum_n (1 - rho_{m,n})``.
+
+    Sources whose admitted route-set most reduces the convergence-bound
+    error term go first — larger aggregation weight, weighted by total
+    route deficiency.  Pure arithmetic, so it serves both the host-side
+    admission order (`admit_homologous_routes`, numpy) and the traced
+    bandwidth-aware selection policy (`core.selection`, jnp).
+
+    Args: p (N,) weights; rho (N, N) client-block E2E success matrix.
+    Returns: (N,) scores (higher = admitted earlier).
+    """
+    deficiency = (1.0 - rho).sum(axis=1)
+    return (p * p + p) * deficiency
+
+
 def admit_homologous_routes(
     p: np.ndarray,
     rho: np.ndarray,
@@ -119,17 +162,46 @@ def admit_homologous_routes(
     """Priority admission of homologous route-sets under limited bandwidth.
 
     The paper: when bandwidth is insufficient, admit per-source route sets
-    (source m -> all destinations) in an order that most reduces
-    ``sum_m (p_m^2 + p_m) * sum_n (1 - rho_{m,n})``, i.e. sources with larger
-    p_m (weighted by their total route deficiency) go first.
+    (source m -> all destinations) in decreasing `admission_scores` order.
 
     Returns the admission order (list of source client indices).
     """
     p = np.asarray(p)
     rho = np.asarray(rho)[:n_clients, :n_clients]
-    deficiency = (1.0 - rho).sum(axis=1)
-    score = (p ** 2 + p) * deficiency
-    order = list(np.argsort(-score))
+    score = admission_scores(p, rho)
+    order = list(np.argsort(-score, kind="stable"))
     if max_admitted is not None:
         order = order[:max_admitted]
     return [int(i) for i in order]
+
+
+def admitted_rho_mask(
+    p: np.ndarray,
+    rho: np.ndarray,
+    *,
+    n_clients: int,
+    max_admitted: int | None = None,
+) -> np.ndarray:
+    """``rho`` masked to the admitted homologous route-sets (host-side).
+
+    A non-admitted source's routes are simply not scheduled: its row of the
+    client block zeroes (no destination receives it) except the diagonal —
+    a client always holds its own model.  Rows past ``n_clients``
+    (routing-only relays) are not model sources and pass through untouched.
+    This is the bandwidth-capped channel the Section-IV rule induces; the
+    traced ``bandwidth`` selection policy (`core.selection`) realizes the
+    SAME cut as a participation mask (`aggregation.mask_senders` zeroes the
+    same sender rows of the sampled success mask).
+    """
+    rho = np.array(rho, copy=True)
+    admitted = admit_homologous_routes(
+        p, rho, n_clients=n_clients, max_admitted=max_admitted
+    )
+    cut = np.ones(rho.shape[0], dtype=bool)
+    cut[np.asarray(admitted, dtype=int)] = False
+    cut[n_clients:] = False
+    block = rho[:n_clients, :n_clients]        # view: writes through
+    diag = np.diagonal(block).copy()
+    block[cut[:n_clients]] = 0.0
+    np.fill_diagonal(block, diag)
+    return rho

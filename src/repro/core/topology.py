@@ -109,7 +109,9 @@ def packet_success_rate(dist_m: jnp.ndarray, packet_len_bits: int,
     Computed in log space for numerical stability at large packet lengths.
     """
     eps_bit = bit_success_rate(link_snr(dist_m, tx_power_dbm))
-    eps_bit = jnp.clip(eps_bit, 1e-300, 1.0)
+    # Dtype-aware floor: a literal 1e-300 underflows to 0.0 in float32,
+    # leaving log() unprotected (see routing.link_cost).
+    eps_bit = jnp.clip(eps_bit, jnp.finfo(eps_bit.dtype).tiny, 1.0)
     return jnp.exp(packet_len_bits * jnp.log(eps_bit))
 
 
@@ -255,9 +257,9 @@ def random_geometric_network(
 
 
 # ---------------------------------------------------------------------------
-# Time-varying topology schedules (DESIGN.md §8).
+# Time-varying topology schedules (DESIGN.md §8, §10).
 #
-# Both builders return a host-side (T, V, V) float32 link_eps stack — the
+# All builders return a host-side (T, V, V) float32 link_eps stack — the
 # `Scenario.link_eps` time axis — so per-round channel variation is plain
 # data: no recompilation, one grid program serves static and dynamic
 # scenarios alike.  Round t of the simulator uses entry t % T.
@@ -308,6 +310,107 @@ def markov_link_schedule(
     return out
 
 
+def mobility_link_schedule(
+    net: Network,
+    n_rounds: int,
+    *,
+    step_m: float,
+    seed: int = 0,
+    range_m: float | None = None,
+    area: tuple[float, float, float, float] | None = None,
+    packet_len_bits: int | None = None,
+    tx_power_dbm: float | None = None,
+) -> np.ndarray:
+    """Correlated per-round PERs from random-waypoint node mobility.
+
+    Unlike `markov_link_schedule` (i.i.d.-per-edge churn) and
+    `fading_per_schedule` (i.i.d.-per-round shadowing), mobility makes
+    consecutive rounds CORRELATED: every node walks the random-waypoint
+    model — pick a uniform waypoint in the area, move ``step_m`` meters
+    toward it per round, pick a new one on arrival — and each round's link
+    qualities are re-derived from the *current* pairwise distances through
+    the same SNR -> BER -> packet-success chain `make_network` uses.
+
+    Round 0 uses the network's own coordinates.  With the default
+    ``range_m=None`` (static adjacency) the first entry therefore always
+    equals the static matrix, and ``step_m=0`` freezes every node and
+    reproduces the static network BITWISE in every round (the exact
+    `make_network` ops run on the exact same distances).  A float
+    ``range_m`` re-derives adjacency by distance from round 0 on, which
+    generally differs from the density/MST edge set `make_network` chose —
+    neither neutrality claim holds then.
+
+    Args:
+      net: the starting network (round-0 coordinates + static adjacency).
+      n_rounds: schedule length T.
+      step_m: meters moved per round (node speed x round duration).
+      seed: waypoint draws (deterministic).
+      range_m: communication range.  ``None`` keeps the STATIC adjacency —
+        the neighbor set is fixed and only link qualities track the
+        geometry (the neutral-composition default).  A float re-derives
+        adjacency per round as ``distance <= range_m`` (links appear and
+        disappear as nodes move; symmetric, no self-loops).
+      area: (x_min, y_min, x_max, y_max) waypoint box; defaults to the
+        bounding box of the network's coordinates.
+      packet_len_bits / tx_power_dbm: PER-model constants; default to the
+        values the network was built with.
+
+    Returns: (n_rounds, V, V) float32 link success stack — a
+    `ScenarioGrid.product(schedules=...)` axis point like any other.
+    """
+    if step_m < 0.0:
+        raise ValueError(f"step_m must be >= 0, got {step_m}")
+    if packet_len_bits is None:
+        packet_len_bits = (net.packet_len_bits
+                           if net.packet_len_bits is not None else 25_000)
+    if tx_power_dbm is None:
+        tx_power_dbm = (net.tx_power_dbm if net.tx_power_dbm is not None
+                        else TX_POWER_DBM)
+    rng = np.random.default_rng(seed)
+    coords = np.array(net.coords, dtype=np.float64, copy=True)
+    v = coords.shape[0]
+    static_adj = np.asarray(net.adjacency)
+    if area is None:
+        lo = coords.min(axis=0)
+        hi = coords.max(axis=0)
+    else:
+        x0, y0, x1, y1 = area
+        lo = np.array([x0, y0], np.float64)
+        hi = np.array([x1, y1], np.float64)
+    waypoints = rng.uniform(lo, hi, size=(v, 2))
+
+    # The walk itself is cheap host numpy; the SNR -> BER -> PER chain runs
+    # ONCE on the whole (T, V, V) distance stack (elementwise ops, so the
+    # batched call is bitwise the per-round one — no T device round-trips).
+    dists = np.empty((n_rounds, v, v))
+    adjs = (None if range_m is None
+            else np.empty((n_rounds, v, v), dtype=bool))
+    for t in range(n_rounds):
+        if t > 0 and step_m > 0.0:
+            delta = waypoints - coords
+            dist_wp = np.sqrt((delta ** 2).sum(axis=1))
+            arrive = dist_wp <= step_m
+            unit = np.where(dist_wp[:, None] > 0.0,
+                            delta / np.maximum(dist_wp, 1e-12)[:, None], 0.0)
+            coords = np.where(arrive[:, None], waypoints,
+                              coords + step_m * unit)
+            if arrive.any():
+                waypoints[arrive] = rng.uniform(lo, hi,
+                                                size=(int(arrive.sum()), 2))
+        diff = coords[:, None, :] - coords[None, :, :]
+        dists[t] = np.sqrt((diff ** 2).sum(-1))
+        if adjs is not None:
+            adjs[t] = (dists[t] <= range_m) & ~np.eye(v, dtype=bool)
+    adj = (np.broadcast_to(static_adj[None], (n_rounds, v, v))
+           if adjs is None else adjs)
+    # The exact make_network chain, so a frozen walk is bitwise static.
+    eps = packet_success_rate(jnp.asarray(dists), packet_len_bits,
+                              tx_power_dbm)
+    eps = jnp.where(jnp.asarray(adj), eps, 0.0)
+    eps = eps * (1.0 - jnp.eye(v))
+    return np.asarray(eps, np.float32)
+
+
 def fading_per_schedule(
     net: Network,
     n_rounds: int,
@@ -331,7 +434,10 @@ def fading_per_schedule(
     Returns: (n_rounds, V, V) float32 link success stack.
     """
     if packet_len_bits is None:
-        packet_len_bits = net.packet_len_bits or 25_000
+        # Explicit `is None` (not `or`): a falsy 0 must be honored, the
+        # same guard class fixed in errors.sample_success.
+        packet_len_bits = (net.packet_len_bits
+                           if net.packet_len_bits is not None else 25_000)
     if tx_power_dbm is None:
         tx_power_dbm = (net.tx_power_dbm if net.tx_power_dbm is not None
                         else TX_POWER_DBM)
@@ -353,7 +459,7 @@ def fading_per_schedule(
     rx_dbm = tx_power_dbm - np.asarray(pathloss_db(jnp.asarray(dist)))
     snr = 10.0 ** ((rx_dbm[None] + shadow - noise_dbm) / 10.0)
     eps_bit = np.asarray(bit_success_rate(jnp.asarray(snr)))
-    eps_bit = np.clip(eps_bit, 1e-300, 1.0)
+    eps_bit = np.clip(eps_bit, np.finfo(eps_bit.dtype).tiny, 1.0)
     eps = np.exp(packet_len_bits * np.log(eps_bit))
     eps = eps * adj[None] * (1.0 - np.eye(v, dtype=np.float32))[None]
     return eps.astype(np.float32)

@@ -35,6 +35,20 @@ points, still batched through the same single dispatch:
   * local epochs    — ``local_epochs=(N,)`` per-client vector (heterogeneous
                       compute, masked scan over the static bound).
 
+Closed-loop axes (DESIGN.md §10) — participation as a LIVE policy instead
+of a precomputed mask:
+
+  * sampling policy — ``sampling_policies=[(label, policy, frac)]`` with
+                      policy in `core.selection.POLICY_IDS` (uniform /
+                      loss / grad_norm / bandwidth): each round's mask is
+                      computed inside the round scan from per-client
+                      signals (trailing loss, update norms, per-round
+                      admission scores), dispatched by a traced
+                      `lax.switch` — a policy sweep is still ONE dispatch,
+                      and `GridResult.selected` records the realized
+                      masks.  Any ``participation`` axis becomes the
+                      availability base the policies refine.
+
 Grid leaves are kept HOST-SIDE (numpy): the per-dispatch uniform-field
 hoisting test then costs no device sync, and arrays only move to devices
 at dispatch.
@@ -93,7 +107,7 @@ _SHARD_MAP_NO_CHECK = {
      else "check_rep"): False
 }
 
-from repro.core import protocols, topology
+from repro.core import protocols, selection, topology
 from repro.data.synthetic import FederatedDataset
 from repro.fl import simulator
 from repro.launch import mesh as launch_mesh
@@ -316,6 +330,7 @@ class ScenarioGrid:
         )
         has_part = [g.scenarios.participation is not None for g in grids]
         has_epochs = [g.scenarios.local_epochs is not None for g in grids]
+        any_policy = any(g.scenarios.policy_id is not None for g in grids)
         if any(has_epochs) and not all(has_epochs):
             raise ValueError(
                 "cannot concat grids with and without per-client "
@@ -356,7 +371,14 @@ class ScenarioGrid:
                 if part is None:
                     part = np.ones((len(g), 1, part_n), np.float32)
                 part = _normalize_participation(part, part_n, t_part)
-            return s._replace(link_eps=le, rho=None, participation=part)
+            pol, frac = s.policy_id, s.select_frac
+            if any_policy and pol is None:
+                # Neutral fill-in: the uniform policy IS the open-loop path
+                # (frac unread), so policy-free grids join bitwise intact.
+                pol = np.zeros((len(g),), np.int32)
+                frac = np.ones((len(g),), np.float32)
+            return s._replace(link_eps=le, rho=None, participation=part,
+                              policy_id=pol, select_frac=frac)
 
         stacked = jax.tree.map(
             lambda *leaves: np.concatenate([np.asarray(l) for l in leaves]),
@@ -376,11 +398,12 @@ class ScenarioGrid:
         seeds: Iterable[int] = (0,),
         lrs: Iterable[float] = (0.05,),
         participation: Sequence[tuple[str, Any]] | None = None,
+        sampling_policies: Sequence[tuple[str, str, float]] | None = None,
         local_epochs: Any = None,
         aggregator: int = 6,
     ) -> "ScenarioGrid":
-        """Cross topology x (protocol, mode) x seeds x lrs [x participation]
-        into one grid.
+        """Cross topology x (protocol, mode) x seeds x lrs [x participation
+        x sampling policy] into one grid.
 
         Args:
           networks: (label, Network) pairs — one per STATIC topology/PER
@@ -400,6 +423,13 @@ class ScenarioGrid:
             (N,), (T, N) (see `sampling_schedule`), or None for full
             participation (normalized to an all-ones mask so the batch
             stays structurally uniform).
+          sampling_policies: optional CLOSED-LOOP axis of (label, policy,
+            select_frac) triples — policy a `core.selection.POLICY_IDS`
+            name, select_frac the per-round participant fraction in
+            (0, 1] (k = ceil(frac * N); unread by ``uniform``).  The
+            per-round mask is computed inside the round scan from live
+            signals; a ``participation`` axis, when also given, is the
+            availability base every policy refines (DESIGN.md §10).
           local_epochs: optional (N,) per-client epoch vector shared by
             every grid point (values clip to the SimConfig bound).
           aggregator: C-FL star center (shared; only read by cfl scenarios).
@@ -481,13 +511,40 @@ class ScenarioGrid:
         else:
             part_axis = [(None, None)]
 
+        # The closed-loop sampling-policy axis (None -> no policy fields:
+        # the grid traces the exact open-loop program).
+        if sampling_policies is not None:
+            if not sampling_policies:
+                raise ValueError(
+                    "sampling_policies axis needs at least one point"
+                )
+            pol_axis = []
+            for pol_label, policy, frac in sampling_policies:
+                if policy not in selection.POLICY_IDS:
+                    raise ValueError(
+                        f"unknown sampling policy {policy!r}: choose from "
+                        f"{sorted(selection.POLICY_IDS)}"
+                    )
+                if not 0.0 < float(frac) <= 1.0:
+                    raise ValueError(
+                        f"select_frac must be in (0, 1], got {frac}"
+                    )
+                pol_axis.append((
+                    pol_label,
+                    np.asarray(selection.POLICY_IDS[policy], np.int32),
+                    np.asarray(frac, np.float32),
+                ))
+        else:
+            pol_axis = [(None, None, None)]
+
         epochs_vec = (None if local_epochs is None
                       else np.asarray(local_epochs, np.int32))
 
         rows, labels = [], []
-        for (net_label, links), (proto, mode), seed, lr, (part_label, mask) \
+        for (net_label, links), (proto, mode), seed, lr, (part_label, mask), \
+                (pol_label, pol_id, frac) \
                 in itertools.product(topo_axis, protocols, seeds, lrs,
-                                     part_axis):
+                                     part_axis, pol_axis):
             rows.append(simulator.Scenario(
                 link_eps=links,
                 seed=np.asarray(seed, np.int32),
@@ -497,6 +554,8 @@ class ScenarioGrid:
                 lr=np.asarray(lr, np.float32),
                 participation=mask,
                 local_epochs=epochs_vec,
+                policy_id=pol_id,
+                select_frac=frac,
             ))
             parts = [net_label, f"{proto}+{mode}"]
             if len(seeds) > 1:
@@ -505,6 +564,8 @@ class ScenarioGrid:
                 parts.append(f"lr{lr:g}")
             if part_label is not None and len(part_axis) > 1:
                 parts.append(part_label)
+            if pol_label is not None and len(pol_axis) > 1:
+                parts.append(pol_label)
             labels.append("/".join(parts))
         if len(set(labels)) != len(labels):
             dups = [l for l, c in Counter(labels).items() if c > 1]
@@ -523,13 +584,16 @@ class GridResult:
 
     With eval thinning (``SimConfig.eval_every=k``) acc/loss carry
     ``rounds // k`` rows (row j = round ``(j + 1) * k - 1``); ``bias``
-    always stays per-round.
+    always stays per-round.  Closed-loop grids (a ``sampling_policies``
+    axis) additionally carry ``selected`` — the realized per-round
+    participation masks, always per-round; None for open-loop grids.
     """
 
     acc: np.ndarray        # (G, evals, N)  test accuracy
     loss: np.ndarray       # (G, evals, N)  train loss
     bias: np.ndarray       # (G, rounds)    mean ||Lambda_l||_F^2 (ra only)
     labels: list[str]
+    selected: np.ndarray | None = None   # (G, rounds, N) realized masks
 
     def __len__(self) -> int:
         return len(self.labels)
@@ -538,6 +602,11 @@ class GridResult:
     def mean_acc(self) -> np.ndarray:
         """(G, rounds) accuracy averaged across clients."""
         return self.acc.mean(axis=2)
+
+    @property
+    def selected_frac(self) -> np.ndarray | None:
+        """(G, rounds) realized participation fraction (closed loop only)."""
+        return None if self.selected is None else self.selected.mean(axis=2)
 
     def result(self, key: int | str) -> simulator.SimResult:
         """One scenario's trajectory as a scalar SimResult.
@@ -576,6 +645,8 @@ def _metrics_to_grid_result(metrics: dict, labels: list[str]) -> GridResult:
         loss=np.asarray(metrics["loss"]),
         bias=np.asarray(metrics["bias"]),
         labels=list(labels),
+        selected=(np.asarray(metrics["selected"])
+                  if "selected" in metrics else None),
     )
 
 

@@ -30,6 +30,15 @@ All three default to the static behavior (None / rank-2 ``link_eps``), in
 which case `run_scenario` traces the EXACT pre-dynamic program — static
 scenarios stay bit-identical.
 
+Closed-loop selection (DESIGN.md §10): a `Scenario` may additionally carry
+a ``policy_id`` / ``select_frac`` pair (`core.selection.POLICY_IDS`); the
+participation mask is then computed INSIDE the round scan, per round, from
+live per-client signals (trailing train loss + local update norms) carried
+in the scan state — dispatched by `lax.switch` like protocols, so a grid
+sweeping policies stays one vmapped/sharded dispatch.  ``policy_id=None``
+(the default) traces the exact pre-policy program; the ``uniform`` policy
+reproduces the open-loop participation path bitwise.
+
 Static compute knobs (DESIGN.md §9): `SimConfig.agg_impl` selects the
 aggregation substrate (jnp reference vs the fused/batched Pallas kernel;
 auto = native Pallas on TPU only), `eval_every=k` thins per-round metric
@@ -65,7 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import errors, protocols, routing, topology
+from repro.core import errors, protocols, routing, selection, topology
 from repro.data.synthetic import FederatedDataset
 from repro.models.smallnets import accuracy, ce_loss
 
@@ -74,6 +83,27 @@ Pytree = Any
 
 class PacketLengthMismatchWarning(UserWarning):
     """The codec's segment size and the network's PER packet length differ."""
+
+
+@jax.custom_batching.custom_vmap
+def _fusion_barrier(tree: Pytree) -> Pytree:
+    """`lax.optimization_barrier` that composes with vmap (identity values).
+
+    The closed-loop signal refresh reduces over the same tensors the round
+    math produces; without a barrier those extra consumers perturb XLA's
+    fusion choices and break the uniform policy's REQUIRED bit-identity
+    with the open-loop path (~1e-7 drift — the same fragility DESIGN.md §9
+    records for `bias_sq_norm_fused`).  `optimization_barrier` has no
+    batching rule, so `run_grid`'s vmap needs this custom one: the barrier
+    is elementwise identity, hence batching passes straight through.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+@_fusion_barrier.def_vmap
+def _fusion_barrier_vmap(axis_size, in_batched, tree):
+    del axis_size
+    return jax.lax.optimization_barrier(tree), in_batched[0]
 
 
 @dataclasses.dataclass
@@ -127,7 +157,11 @@ class Scenario(NamedTuple):
     ``rho`` is the derived E2E success matrix (matching rank) — None until
     `prepare`.  ``participation`` is an optional (N,) or (T, N) client
     sampling mask; ``local_epochs`` an optional (N,) per-client epoch
-    vector.  All dynamic fields default to the static behavior.
+    vector.  ``policy_id`` / ``select_frac`` select a CLOSED-LOOP sampling
+    policy (`core.selection.POLICY_IDS`): the per-round mask is then
+    computed inside the round scan from live signals, with the
+    ``participation`` schedule acting as the availability base.  All
+    dynamic fields default to the static behavior.
     """
 
     link_eps: jnp.ndarray         # (V, V) or (T, V, V)
@@ -139,6 +173,8 @@ class Scenario(NamedTuple):
     rho: Any = None               # (V, V) / (T, V, V) E2E success (derived)
     participation: Any = None     # (N,) / (T, N) float32 sampling mask
     local_epochs: Any = None      # (N,) int32 per-client local epochs
+    policy_id: Any = None         # () int32   selection.POLICY_IDS
+    select_frac: Any = None       # () float32 participant fraction
 
     def prepare(self) -> "Scenario":
         """Fill the derived min-E2E-PER success matrix (idempotent).
@@ -163,6 +199,11 @@ class Scenario(NamedTuple):
         return (jnp.ndim(self.link_eps) == 3
                 or self.participation is not None
                 or self.local_epochs is not None)
+
+    @property
+    def is_closed_loop(self) -> bool:
+        """True if a live sampling policy decides participation in-loop."""
+        return self.policy_id is not None
 
     def at_round(self, t: jnp.ndarray) -> "Scenario":
         """The static per-round view of a (possibly dynamic) scenario.
@@ -234,16 +275,28 @@ def make_scenario(
     link_schedule: jnp.ndarray | None = None,
     participation: jnp.ndarray | None = None,
     local_epochs: jnp.ndarray | None = None,
+    sampling_policy: str | None = None,
+    select_frac: float = 0.5,
 ) -> Scenario:
     """Lift a (Network, SimConfig) pair into a traced Scenario.
 
     Optional dynamic axes: ``link_schedule`` replaces the network's static
     link matrix with a (T, V, V) stack (see `topology.markov_link_schedule`
-    / `topology.fading_per_schedule`); ``participation`` is an (N,) or
-    (T, N) sampling mask; ``local_epochs`` an (N,) per-client vector.
+    / `topology.fading_per_schedule` / `topology.mobility_link_schedule`);
+    ``participation`` is an (N,) or (T, N) sampling mask; ``local_epochs``
+    an (N,) per-client vector.  ``sampling_policy`` (a
+    `core.selection.POLICY_IDS` name) turns participation CLOSED-LOOP:
+    each round selects ``ceil(select_frac * N)`` clients from live signals
+    (the ``participation`` schedule, when also given, is the availability
+    base — see DESIGN.md §10).
     """
     check_packet_consistency(net, cfg.seg_len)
     link_eps = net.link_eps if link_schedule is None else link_schedule
+    if sampling_policy is not None and sampling_policy not in selection.POLICY_IDS:
+        raise ValueError(
+            f"unknown sampling_policy {sampling_policy!r}: "
+            f"choose from {sorted(selection.POLICY_IDS)}"
+        )
     return Scenario(
         link_eps=jnp.asarray(link_eps, jnp.float32),
         seed=jnp.asarray(cfg.seed, jnp.int32),
@@ -255,6 +308,11 @@ def make_scenario(
                        else jnp.asarray(participation, jnp.float32)),
         local_epochs=(None if local_epochs is None
                       else jnp.asarray(local_epochs, jnp.int32)),
+        policy_id=(None if sampling_policy is None
+                   else jnp.asarray(selection.POLICY_IDS[sampling_policy],
+                                    jnp.int32)),
+        select_frac=(None if sampling_policy is None
+                     else jnp.asarray(select_frac, jnp.float32)),
     )
 
 
@@ -402,29 +460,81 @@ def build_sim(
 
         return jax.vmap(one)(stacked, xs, ys)
 
-    def _advance(state: dict, rng: jax.Array, scenario: Scenario):
-        """Train + exchange, NO metric evaluation: (state, bias)."""
-        part = scenario.participation
-        if part is not None:
-            part = part[:n]
-        stacked = local_train(state["params"], scenario.lr,
+    def _round_core(state: dict, rng: jax.Array, scenario: Scenario,
+                    part: jnp.ndarray | None):
+        """The shared round body: train -> (mask) -> exchange.
+
+        ``part`` is the realized (N,) participation mask (None = full,
+        the exact pre-dynamic trace).  Returns (state, trained, bias)
+        where ``trained`` is the post-training pre-exchange stack (the
+        closed loop's update-norm signal input).  Both `_advance` and
+        `_advance_closed` run THIS code, so the open- and closed-loop
+        paths cannot drift apart — the uniform policy's bit-identity with
+        the open loop rests on it.
+        """
+        trained = local_train(state["params"], scenario.lr,
                               scenario.local_epochs)
         if part is not None:
-            stacked = jax.tree.map(
+            trained = jax.tree.map(
                 lambda new, old: jnp.where(
                     part.reshape((-1,) + (1,) * (new.ndim - 1)) > 0, new, old
                 ),
-                stacked, state["params"],
+                trained, state["params"],
             )
-        w_seg, spec, m_params = protocols._to_segments(stacked, seg_len)
+        w_seg, spec, m_params = protocols._to_segments(trained, seg_len)
         w_seg, _e, bias = protocols.dispatch_round_seg(
             w_seg, p, scenario.rho, scenario.link_eps, rng,
             scenario.protocol_id, scenario.mode_id, scenario.aggregator,
             n_mixes=aayg_mixes, participation=part,
             agg_impl=agg_impl, track_bias=track_bias,
         )
-        stacked = protocols._from_segments(w_seg, spec, m_params)
-        return {"params": stacked}, bias
+        out = protocols._from_segments(w_seg, spec, m_params)
+        return {"params": out}, trained, bias
+
+    def _advance(state: dict, rng: jax.Array, scenario: Scenario):
+        """Train + exchange, NO metric evaluation: (state, bias)."""
+        part = scenario.participation
+        if part is not None:
+            part = part[:n]
+        state, _trained, bias = _round_core(state, rng, scenario, part)
+        return state, bias
+
+    def _advance_closed(state: dict, rng: jax.Array, scenario_t: Scenario,
+                        signals: selection.SelectionSignals):
+        """Closed-loop round (DESIGN.md §10): select -> train -> exchange.
+
+        The participation mask is computed HERE, inside the scan, from the
+        live ``signals`` (the policy decides who trains this round); the
+        scenario's own ``participation`` schedule is the availability base.
+        Returns (state, new_signals, mask, bias) — participants' trailing
+        loss / update-norm signals are refreshed, everyone else keeps the
+        score they last earned.
+        """
+        base = scenario_t.participation
+        base = (jnp.ones((n,), jnp.float32) if base is None
+                else jnp.asarray(base, jnp.float32)[:n])
+        mask = selection.select_clients(
+            scenario_t.policy_id, base, signals, p,
+            scenario_t.rho[:n, :n], scenario_t.select_frac,
+        )
+        old_params = state["params"]
+        state, stacked, bias = _round_core(state, rng, scenario_t, mask)
+        out = state["params"]
+        # Signal refresh behind an optimization barrier: the extra
+        # reductions (per-client loss / update norms) must not give XLA
+        # new fusion opportunities inside the shared round math — the
+        # uniform policy's trajectory is REQUIRED to be bitwise identical
+        # to the open-loop path, and fusion-order changes break that at
+        # ~1e-7 (cf. the bias_sq_norm_fused note, DESIGN.md §9).
+        b_new, b_old, b_out = _fusion_barrier(
+            (stacked, old_params, out)
+        )
+        upd = selection.update_norms(b_new, b_old)
+        new_signals = selection.SelectionSignals(
+            loss=jnp.where(mask > 0, train_loss(b_out), signals.loss),
+            upd_norm=jnp.where(mask > 0, upd, signals.upd_norm),
+        )
+        return state, new_signals, mask, bias
 
     def round_step(state: dict, rng: jax.Array, scenario: Scenario):
         """One pure D-FL round: local training + traced-protocol exchange.
@@ -444,6 +554,12 @@ def build_sim(
                 "scenario with scenario.at_round(t) (run_scenario does "
                 "this inside its scan)"
             )
+        if scenario.policy_id is not None:
+            raise ValueError(
+                "round_step cannot run a closed-loop scenario: the "
+                "sampling policy needs the signal carry that only "
+                "run_scenario's scan threads (DESIGN.md §10)"
+            )
         state, bias = _advance(state, rng, scenario)
         metrics = {
             "acc": evaluate(state["params"]),
@@ -451,6 +567,67 @@ def build_sim(
             "bias": bias,
         }
         return state, metrics
+
+    def _run_closed(scenario: Scenario, stacked, key: jax.Array) -> dict:
+        """Closed-loop scan: signals ride the carry (DESIGN.md §10).
+
+        The RNG split order matches the open-loop scans, and the uniform
+        policy's mask IS the base participation mask, so
+        ``policy="uniform"`` reproduces the open-loop trajectory bitwise.
+        Metrics grow a ``selected`` entry — the realized (rounds, N)
+        participation masks (the closed loop's decisions are data, not
+        just side effects).
+        """
+        signals0 = selection.init_signals(train_loss(stacked))
+
+        if eval_every == 1:
+            def body_cl(carry, t):
+                state, key, sig = carry
+                key, k_round = jax.random.split(key)
+                state, sig, mask, bias = _advance_closed(
+                    state, k_round, scenario.at_round(t), sig
+                )
+                metrics = {
+                    "acc": evaluate(state["params"]),
+                    "loss": train_loss(state["params"]),
+                    "bias": bias,
+                    "selected": mask,
+                }
+                return (state, key, sig), metrics
+
+            _, metrics = jax.lax.scan(
+                body_cl, ({"params": stacked}, key, signals0),
+                jnp.arange(n_rounds),
+            )
+            return metrics
+
+        def inner_cl(carry, t):
+            state, key, sig = carry
+            key, k_round = jax.random.split(key)
+            state, sig, mask, bias = _advance_closed(
+                state, k_round, scenario.at_round(t), sig
+            )
+            return (state, key, sig), (bias, mask)
+
+        def chunk_cl(carry, c):
+            carry, (biases, masks) = jax.lax.scan(
+                inner_cl, carry, c * eval_every + jnp.arange(eval_every)
+            )
+            state = carry[0]
+            return carry, {
+                "acc": evaluate(state["params"]),
+                "loss": train_loss(state["params"]),
+                "bias": biases,
+                "selected": masks,
+            }
+
+        _, metrics = jax.lax.scan(
+            chunk_cl, ({"params": stacked}, key, signals0),
+            jnp.arange(n_rounds // eval_every),
+        )
+        metrics["bias"] = metrics["bias"].reshape(-1)          # (n_rounds,)
+        metrics["selected"] = metrics["selected"].reshape(-1, n)
+        return metrics
 
     def run_scenario(scenario: Scenario) -> dict:
         scenario = scenario.prepare()
@@ -460,6 +637,8 @@ def build_sim(
         stacked = jax.tree.map(
             lambda leaf: jnp.broadcast_to(leaf[None], (n,) + leaf.shape), params0
         )
+        if scenario.policy_id is not None:
+            return _run_closed(scenario, stacked, key)
         dynamic = scenario.is_dynamic
 
         if eval_every == 1:
