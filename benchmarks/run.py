@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig_selection — sampling policy x mobility churn (DESIGN.md §10)
   kernel — Pallas kernels vs references
   roofline — dry-run derived roofline table (DESIGN.md §Roofline)
+  bench_serve — open-loop arrivals through ScenarioServer (DESIGN.md §11)
 """
 import argparse
 import importlib
@@ -20,7 +21,7 @@ import traceback
 
 MODULES = ["fig2_protocols", "fig3_sweep", "table3_overhead", "fig8_bias",
            "fig9_relays", "fig10_coeffs", "fig_dynamic", "fig_selection",
-           "kernel_bench", "roofline"]
+           "kernel_bench", "roofline", "bench_serve"]
 
 
 def main() -> None:

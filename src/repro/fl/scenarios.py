@@ -81,6 +81,10 @@ Public API
   run_grid(..., devices=None)     one-shot batched (optionally sharded) run
   run_sequential(...)             per-scenario-dispatch baseline
   GridRunner(..., devices=None)   warm-program server for repeated grids
+                                  (+ tracker= / max_cached_programs= /
+                                  warmup() / validate() — DESIGN.md §11)
+  ProgramCache                    bounded LRU of AOT-compiled grid programs
+  validate_grid / AdmissionError  admission-time request validation
   GridResult                      stacked trajectories + per-label access
 """
 from __future__ import annotations
@@ -88,7 +92,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import itertools
-from collections import Counter
+from collections import Counter, OrderedDict
 from typing import Any, Callable, Iterable, Sequence
 
 import jax
@@ -111,6 +115,7 @@ from repro.core import protocols, selection, topology
 from repro.data.synthetic import FederatedDataset
 from repro.fl import simulator
 from repro.launch import mesh as launch_mesh
+from repro.launch import tracker as launch_tracker
 
 Pytree = Any
 
@@ -688,15 +693,251 @@ def _hoist_uniform(batch: simulator.Scenario):
     return simulator.Scenario(**axes), simulator.Scenario(**args)
 
 
+class AdmissionError(ValueError):
+    """A scenario grid failed admission-time validation (DESIGN.md §11).
+
+    Raised by `validate_grid` / `GridRunner.validate` with a message naming
+    the offending scenario labels, so a serving tier can reject ONE bad
+    request actionably instead of letting it surface as a deep trace-time
+    failure inside a warm compiled program.
+    """
+
+
+def _aval_sig(tree: simulator.Scenario) -> tuple:
+    """Shape/dtype signature of a scenario pytree (host metadata only).
+
+    Part of the program-cache key: two dispatches share a compiled
+    executable exactly when their hoist signature, mesh, AND input avals
+    match.  Reads only ``.shape`` / ``.dtype`` — never values — so it
+    costs no device sync.
+    """
+    sig = []
+    for name, leaf in tree._asdict().items():
+        if leaf is None:
+            sig.append((name, None))
+        else:
+            dt = getattr(leaf, "dtype", None)
+            if dt is None:                          # plain python scalar
+                dt = np.asarray(leaf).dtype
+            sig.append((name, tuple(np.shape(leaf)), str(dt)))
+    return tuple(sig)
+
+
+def _bucket_target(g: int, pad_to) -> int:
+    """The padded batch size for a ``g``-scenario dispatch group.
+
+    ``pad_to`` declares the warm batch buckets: an int (one bucket) or a
+    sequence of ints.  A group pads up to the smallest bucket >= g; a
+    group LARGER than every bucket pads to the next multiple of the
+    largest (so oversized batches still reuse a bounded family of shapes
+    instead of compiling one program per arrival pattern).  ``None``
+    disables padding (the one-shot `run_grid` behavior).
+    """
+    if pad_to is None:
+        return g
+    buckets = sorted({int(b) for b in
+                      ((pad_to,) if isinstance(pad_to, int) else pad_to)})
+    if not buckets or buckets[0] < 1:
+        raise ValueError(f"pad_to buckets must be positive ints, got {pad_to}")
+    for b in buckets:
+        if b >= g:
+            return b
+    top = buckets[-1]
+    return -(-g // top) * top
+
+
+class ProgramCache:
+    """Bounded LRU cache of AOT-compiled grid programs (DESIGN.md §11).
+
+    `GridRunner` previously memoized `jax.jit` wrappers in an unbounded
+    dict — a leak for any long-lived server: every distinct hoist
+    signature / mesh / batch shape kept a compiled XLA executable alive
+    forever.  This cache stores the compiled executables themselves
+    (``jit(...).lower(args).compile()`` — ahead-of-time compilation, which
+    is also what lets `GridRunner.warmup` build a program WITHOUT paying a
+    full dispatch) keyed by (kind, hoist signature, mesh, input avals),
+    and evicts the least-recently-used entry beyond ``max_programs``.
+
+    Hits / misses / evictions are counted both on the attached `Tracker`
+    (``cache/hit`` / ``cache/miss`` / ``cache/evict``) and on the `stats`
+    property — the observable that makes cache lifecycle testable.
+
+    ``max_programs=None`` means unbounded (the one-shot `run_grid` path,
+    where the process dies with its programs).  Not thread-safe: callers
+    (the serving engine) serialize all compilation + dispatch on one
+    thread.
+    """
+
+    def __init__(self, max_programs: int | None = None,
+                 tracker: launch_tracker.Tracker | None = None):
+        if max_programs is not None and max_programs < 1:
+            raise ValueError(
+                f"max_programs must be >= 1 or None, got {max_programs}"
+            )
+        self.max_programs = max_programs
+        self._entries: OrderedDict = OrderedDict()
+        self._tracker = tracker or launch_tracker.NullTracker()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return {"programs": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions}
+
+    def lookup(self, key, build: Callable[[], Any]):
+        """The cached program for ``key``, compiling (and possibly
+        evicting) on miss."""
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            self._tracker.count("cache/hit")
+            return entry
+        self.misses += 1
+        self._tracker.count("cache/miss")
+        entry = build()
+        self._entries[key] = entry
+        while (self.max_programs is not None
+               and len(self._entries) > self.max_programs):
+            self._entries.popitem(last=False)
+            self.evictions += 1
+            self._tracker.count("cache/evict")
+        return entry
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+def validate_grid(grid: ScenarioGrid, *, n_clients: int | None = None,
+                  seg_len: int | None = None,
+                  strict_packet: bool = False) -> None:
+    """Admission-time structural validation of a scenario grid.
+
+    Checks every constraint that would otherwise surface as a deep
+    trace-time failure (or worse, silent nonsense) inside the compiled
+    program: leaf ranks and batch-axis consistency, link matrices square /
+    finite / within [0, 1], protocol / mode / policy ids in range,
+    participation client counts against the bound dataset, select_frac in
+    (0, 1], unique labels — and, with ``strict_packet``, the PER-packet vs
+    codec-segment consistency of `simulator.check_packet_len` as a hard
+    error.  Raises `AdmissionError` naming the offending scenario labels;
+    pure host-side numpy (no device sync).
+    """
+    s = grid.scenarios
+    g = len(grid.labels)
+
+    def name_rows(mask) -> str:
+        idx = np.nonzero(np.asarray(mask))[0]
+        shown = ", ".join(f"{i}:{grid.labels[i]!r}" for i in idx[:3])
+        more = f" (+{len(idx) - 3} more)" if len(idx) > 3 else ""
+        return shown + more
+
+    def fail(msg: str) -> None:
+        raise AdmissionError(f"grid rejected: {msg}")
+
+    le = np.asarray(s.link_eps)
+    if le.ndim not in (3, 4):
+        fail(f"link_eps must be (G, V, V) or (G, T, V, V), got {le.shape}")
+    if le.shape[0] != g:
+        fail(f"{g} labels but {le.shape[0]} link_eps rows")
+    if le.shape[-1] != le.shape[-2]:
+        fail(f"link matrices must be square, got {le.shape}")
+    bad = ~np.isfinite(le).reshape(g, -1).all(axis=1)
+    if bad.any():
+        fail(f"non-finite link_eps in scenario(s) {name_rows(bad)}")
+    bad = ((le < 0) | (le > 1)).reshape(g, -1).any(axis=1)
+    if bad.any():
+        fail(f"link_eps outside [0, 1] in scenario(s) {name_rows(bad)}")
+
+    for field, n_ids, ids in (
+        ("protocol_id", len(PROTOCOL_IDS), PROTOCOL_IDS),
+        ("mode_id", len(MODE_IDS), MODE_IDS),
+    ):
+        arr = np.asarray(getattr(s, field))
+        if arr.shape != (g,):
+            fail(f"{field} must be ({g},), got {arr.shape}")
+        bad = (arr < 0) | (arr >= n_ids)
+        if bad.any():
+            fail(f"{field} out of range [0, {n_ids}) in scenario(s) "
+                 f"{name_rows(bad)} — known ids: {sorted(ids)}")
+
+    lr = np.asarray(s.lr)
+    bad = ~np.isfinite(lr).reshape(g, -1).all(axis=1)
+    if bad.any():
+        fail(f"non-finite lr in scenario(s) {name_rows(bad)}")
+
+    if s.participation is not None:
+        part = np.asarray(s.participation)
+        if part.ndim not in (2, 3) or part.shape[0] != g:
+            fail(f"participation must be (G, N) or (G, T, N) with G={g}, "
+                 f"got {part.shape}")
+        if n_clients is not None and part.shape[-1] != n_clients:
+            fail(f"participation covers {part.shape[-1]} clients but the "
+                 f"bound dataset has {n_clients}")
+        flat = part.reshape(g, -1)
+        bad = ~(np.isfinite(flat) & (flat >= 0) & (flat <= 1)).all(axis=1)
+        if bad.any():
+            fail(f"participation outside [0, 1] in scenario(s) "
+                 f"{name_rows(bad)}")
+
+    if s.local_epochs is not None:
+        ep = np.asarray(s.local_epochs)
+        if n_clients is not None and ep.shape[-1] != n_clients:
+            fail(f"local_epochs covers {ep.shape[-1]} clients but the "
+                 f"bound dataset has {n_clients}")
+        bad = (ep.reshape(g, -1) < 0).any(axis=1)
+        if bad.any():
+            fail(f"negative local_epochs in scenario(s) {name_rows(bad)}")
+
+    if s.policy_id is not None:
+        pol = np.asarray(s.policy_id)
+        n_pol = len(selection.POLICY_IDS)
+        bad = (pol < 0) | (pol >= n_pol)
+        if bad.any():
+            fail(f"policy_id out of range [0, {n_pol}) in scenario(s) "
+                 f"{name_rows(bad)} — known policies: "
+                 f"{sorted(selection.POLICY_IDS)}")
+        frac = np.asarray(s.select_frac)
+        bad = ~(np.isfinite(frac) & (frac > 0) & (frac <= 1))
+        if bad.any():
+            fail(f"select_frac outside (0, 1] in scenario(s) "
+                 f"{name_rows(bad)}")
+
+    dup = [lbl for lbl, c in Counter(grid.labels).items() if c > 1]
+    if dup:
+        fail(f"duplicate labels {dup[:3]} — results would be ambiguous")
+
+    if strict_packet and seg_len is not None:
+        for bits in getattr(grid, "packet_len_bits", ()):
+            try:
+                simulator.check_packet_len(bits, seg_len, strict=True)
+            except ValueError as e:
+                raise AdmissionError(f"grid rejected: {e}") from None
+
+
 class GridRunner:
     """Compiled scenario-grid server: build once, dispatch many grids.
 
     Binds (init, apply, data, statics) into the pure scenario program and
-    caches every jitted variant, so repeated `run()` calls with same-shaped
-    grids pay ZERO recompilation — the production serving loop for
-    many-scenario workloads.  Compiled programs are cached PER (hoist
-    signature, mesh): a runner can serve single-device and sharded grids
-    (and different device subsets) side by side, each staying warm.
+    caches every compiled variant, so repeated `run()` calls with
+    same-shaped grids pay ZERO recompilation — the production serving loop
+    for many-scenario workloads.  Programs are AOT-compiled executables
+    cached PER (hoist signature, mesh, input avals) in a bounded LRU
+    (`ProgramCache`; ``max_cached_programs``): a runner can serve
+    single-device and sharded grids (and different device subsets) side by
+    side, each staying warm, without leaking executables over a long-lived
+    server's life.  `warmup` compiles declared shapes ahead of traffic;
+    `validate` rejects malformed grids at admission time
+    (`AdmissionError`); the streaming front-end on top of this is
+    `repro.launch.serving.ScenarioServer` (DESIGN.md §11).
 
     Args:
       init_fn: model init, `key -> params` pytree.
@@ -711,6 +952,13 @@ class GridRunner:
       devices: default device spec for `run()` — a device sequence, an
         int (first k devices), or None for the single-device vmap path.
         Overridable per call.
+      tracker: metrics sink (`repro.launch.tracker.Tracker`) for cache
+        hit/miss/evict counters and batch fill ratios; defaults to the
+        no-op NullTracker.
+      max_cached_programs: LRU bound on the compiled-program cache
+        (DESIGN.md §11).  None = unbounded — fine for one-shot figure
+        runs, a leak for a long-lived server (the serving engine always
+        sets a bound).
     """
 
     def __init__(
@@ -721,6 +969,8 @@ class GridRunner:
         cfg: simulator.SimConfig,
         *,
         devices: DeviceSpec = None,
+        tracker: launch_tracker.Tracker | None = None,
+        max_cached_programs: int | None = None,
     ):
         self.sim = simulator.build_sim(
             init_fn, apply_fn, data,
@@ -730,8 +980,12 @@ class GridRunner:
             track_bias=cfg.track_bias,
         )
         self.devices = devices
+        self.tracker = tracker or launch_tracker.NullTracker()
         self._seg_len = cfg.seg_len
-        self._jitted: dict[tuple, Callable] = {}  # (in_axes, mesh) -> jit
+        # Bounded LRU of AOT-compiled executables, keyed by (kind, hoist
+        # signature, mesh, input avals) — see ProgramCache.
+        self.programs = ProgramCache(max_cached_programs,
+                                     tracker=self.tracker)
         # Donate the scenario batch on accelerators: the (G, ...) stacks are
         # re-transferred from the host-side grid each dispatch, so their
         # device buffers never outlive one call (no double-buffering of the
@@ -739,10 +993,33 @@ class GridRunner:
         self._donate = simulator.donate_kwargs()
         self._scalar = jax.jit(self.sim.run_scenario, **self._donate)
 
+    def validate(self, grid: ScenarioGrid, *,
+                 strict_packet: bool = False) -> None:
+        """Admission-time grid validation against this runner's binding
+        (client count, codec segment size) — see `validate_grid`.  Raises
+        `AdmissionError` naming the offending scenario labels."""
+        validate_grid(grid, n_clients=self.sim.n_clients,
+                      seg_len=self._seg_len, strict_packet=strict_packet)
+
+    def _index_groups(self, grid: ScenarioGrid,
+                      group_by_protocol: bool) -> list[list[int]]:
+        """The (protocol, mode)-homogeneous dispatch partition of a grid."""
+        g = len(grid)
+        if not group_by_protocol:
+            return [list(range(g))]
+        pid = np.asarray(grid.scenarios.protocol_id)
+        mid = np.asarray(grid.scenarios.mode_id)
+        groups: dict[tuple, list[int]] = {}
+        for i in range(g):
+            groups.setdefault((int(pid[i]), int(mid[i])), []).append(i)
+        return list(groups.values())
+
     def run(self, grid: ScenarioGrid, *,
             group_by_protocol: bool = True,
             devices: DeviceSpec = _INHERIT,
-            sharding: Any = None) -> GridResult:
+            sharding: Any = None,
+            pad_to: int | Sequence[int] | None = None,
+            validate: bool = True) -> GridResult:
         """Run the whole grid through ONE jitted, vmapped training loop.
 
         With ``group_by_protocol`` (default), scenarios are partitioned
@@ -762,6 +1039,18 @@ class GridRunner:
         bit-identical to the single-device path.  Defaults to the
         runner's ``devices``; an explicit ``devices=None`` forces the
         single-device vmap path regardless of the runner default.
+
+        ``pad_to=`` declares warm batch-size buckets (an int or a
+        sequence): each (protocol, mode) sub-batch is padded with
+        routing-neutral filler scenarios up to the smallest bucket that
+        fits (see `_bucket_target`), so a serving tier dispatching
+        variable-size coalesced batches reuses a BOUNDED family of
+        compiled programs instead of compiling per arrival pattern.
+        Filler rows are dropped on unpad — results are bit-identical to
+        the unpadded dispatch.
+
+        ``validate=False`` skips admission validation (`validate_grid`)
+        for callers that already validated at submission time.
         """
         mesh = _resolve_grid_mesh(
             self.devices if devices is _INHERIT else devices, sharding
@@ -770,51 +1059,88 @@ class GridRunner:
         # too (one-time warning; see simulator.check_packet_len).
         for bits in getattr(grid, "packet_len_bits", ()):
             simulator.check_packet_len(bits, self._seg_len)
+        if validate:
+            self.validate(grid)
         g = len(grid)
-        if group_by_protocol:
-            pid = np.asarray(grid.scenarios.protocol_id)
-            mid = np.asarray(grid.scenarios.mode_id)
-            groups: dict[tuple, list[int]] = {}
-            for i in range(g):
-                groups.setdefault((int(pid[i]), int(mid[i])), []).append(i)
-            index_groups = list(groups.values())
-        else:
-            index_groups = [list(range(g))]
+        index_groups = self._index_groups(grid, group_by_protocol)
 
         rows: list[dict | None] = [None] * g
         for idx in index_groups:
             sub = jax.tree.map(
                 lambda leaf: leaf[np.asarray(idx)], grid.scenarios
             )
+            target = _bucket_target(len(idx), pad_to)
+            if target != len(idx):
+                sub = _pad_scenario_batch(sub, target)
+            self.tracker.observe("grid/batch_fill", len(idx) / target)
             if mesh is None:
-                metrics = self._dispatch_vmap(sub)
+                program, args = self._program_vmap(sub)
             else:
-                metrics = self._dispatch_sharded(sub, mesh)
+                program, args = self._program_sharded(sub, mesh)
+            metrics = program(args)
             # Unpad: filler rows (j >= len(idx)) are simply never read.
             for j, i in enumerate(idx):
                 rows[i] = jax.tree.map(lambda leaf: leaf[j], metrics)
         stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *rows)
         return _metrics_to_grid_result(stacked, grid.labels)
 
-    def _dispatch_vmap(self, sub: simulator.Scenario) -> dict:
-        """Single-device path: jit(vmap) over the whole sub-batch."""
+    def warmup(self, grid: ScenarioGrid, *,
+               group_by_protocol: bool = True,
+               devices: DeviceSpec = _INHERIT,
+               sharding: Any = None,
+               pad_to: int | Sequence[int] | None = None) -> int:
+        """AOT-compile every program `run()` would need for this grid —
+        WITHOUT dispatching it.
+
+        The declared-shape warmup of DESIGN.md §11: a server warms the
+        (protocol, mode) x bucket shapes it expects before opening for
+        traffic, so first requests never pay compilation.  Compilation
+        goes through the same `ProgramCache` as `run` (same keys — a
+        warmed program IS the served program), counting toward the LRU
+        bound.  Returns the number of programs actually compiled (0 when
+        everything was already warm).
+        """
+        mesh = _resolve_grid_mesh(
+            self.devices if devices is _INHERIT else devices, sharding
+        )
+        misses0 = self.programs.misses
+        for idx in self._index_groups(grid, group_by_protocol):
+            sub = jax.tree.map(
+                lambda leaf: leaf[np.asarray(idx)], grid.scenarios
+            )
+            target = _bucket_target(len(idx), pad_to)
+            if target != len(idx):
+                sub = _pad_scenario_batch(sub, target)
+            if mesh is None:
+                self._program_vmap(sub)
+            else:
+                self._program_sharded(sub, mesh)
+        return self.programs.misses - misses0
+
+    def _program_vmap(self, sub: simulator.Scenario):
+        """Single-device path: the AOT-compiled jit(vmap) program for this
+        sub-batch's hoist signature + avals, plus its call args."""
         axes, args = _hoist_uniform(sub)
-        sig = (tuple(axes._asdict().items()), None)
-        if sig not in self._jitted:
-            self._jitted[sig] = jax.jit(
+        sig = ("vmap", tuple(axes._asdict().items()), _aval_sig(args))
+
+        def build():
+            fn = jax.jit(
                 jax.vmap(self.sim.run_scenario, in_axes=(axes,)),
                 **self._donate,
             )
-        return self._jitted[sig](args)
+            return fn.lower(args).compile()
 
-    def _dispatch_sharded(self, sub: simulator.Scenario,
-                          mesh: jax.sharding.Mesh) -> dict:
+        return self.programs.lookup(sig, build), args
+
+    def _program_sharded(self, sub: simulator.Scenario,
+                         mesh: jax.sharding.Mesh):
         """Sharded path: pad to a device multiple, shard_map the vmap.
 
         Each device runs `vmap(run_scenario)` over its (g_pad / D)-slice;
         scenarios are independent, so the lowered per-device program has
         no cross-device collectives — XLA only gathers the stacked metrics
-        at the end.  Returned leaves keep the PADDED leading axis.
+        at the end.  The returned program's leaves keep the PADDED leading
+        axis.
 
         A mesh wider than the sub-batch is shrunk to its first g devices:
         the excess devices would only ever compute filler trajectories.
@@ -828,13 +1154,20 @@ class GridRunner:
         d = mesh.devices.size
         sub = _pad_scenario_batch(sub, -(-g // d) * d)
         axes, args = _hoist_uniform(sub)
+        specs = simulator.Scenario(**{
+            name: P(axis_name) if ax == 0 else P()
+            for name, ax in axes._asdict().items()
+        })
+        args = simulator.Scenario(**{
+            name: leaf if leaf is None else jax.device_put(
+                leaf, NamedSharding(mesh, getattr(specs, name)))
+            for name, leaf in args._asdict().items()
+        })
         mesh_key = (axis_name,) + tuple(dev.id for dev in mesh.devices.flat)
-        sig = (tuple(axes._asdict().items()), mesh_key)
-        if sig not in self._jitted:
-            specs = simulator.Scenario(**{
-                name: P(axis_name) if ax == 0 else P()
-                for name, ax in axes._asdict().items()
-            })
+        sig = ("shard", tuple(axes._asdict().items()), mesh_key,
+               _aval_sig(args))
+
+        def build():
             sharded = shard_map(
                 jax.vmap(self.sim.run_scenario, in_axes=(axes,)),
                 mesh=mesh, in_specs=(specs,), out_specs=P(axis_name),
@@ -842,14 +1175,9 @@ class GridRunner:
                 # rejects some primitives in the RNG/scan body).
                 **_SHARD_MAP_NO_CHECK,
             )
-            self._jitted[sig] = (jax.jit(sharded, **self._donate), specs)
-        fn, specs = self._jitted[sig]
-        args = simulator.Scenario(**{
-            name: leaf if leaf is None else jax.device_put(
-                leaf, NamedSharding(mesh, getattr(specs, name)))
-            for name, leaf in args._asdict().items()
-        })
-        return fn(args)
+            return jax.jit(sharded, **self._donate).lower(args).compile()
+
+        return self.programs.lookup(sig, build), args
 
     def run_sequential(self, grid: ScenarioGrid) -> GridResult:
         """Per-scenario-dispatch baseline: the compiled scalar program,

@@ -229,7 +229,25 @@ class Scenario(NamedTuple):
 _WARNED_PACKET_PAIRS: set[tuple[int, int]] = set()
 
 
-def check_packet_len(recorded_bits: int | None, seg_len: int) -> bool:
+def validate_eval_schedule(n_rounds: int, eval_every: int) -> None:
+    """Raise (actionably) unless ``eval_every`` divides ``n_rounds``.
+
+    The metric thinning of DESIGN.md §9 needs a static ``(n_rounds // k,)``
+    axis, so the divisibility constraint is structural.  `build_sim`
+    enforces it at build time, and the serving tier re-checks it at
+    admission (`repro.launch.serving`) so a misconfigured request surfaces
+    as a per-request error instead of killing a warm server.
+    """
+    if eval_every < 1 or n_rounds % eval_every:
+        raise ValueError(
+            f"eval_every={eval_every} must be >= 1 and divide "
+            f"n_rounds={n_rounds} (metrics keep a static shape); the "
+            f"nearest valid values are the divisors of {n_rounds}"
+        )
+
+
+def check_packet_len(recorded_bits: int | None, seg_len: int,
+                     *, strict: bool = False) -> bool:
     """Validate the codec segment size against a recorded PER packet length.
 
     The channel model samples per-*packet* errors for packets of
@@ -242,24 +260,29 @@ def check_packet_len(recorded_bits: int | None, seg_len: int) -> bool:
     (recorded_bits, seg_len) pair otherwise.  Both the scalar path
     (`make_scenario`) and the grid path (`scenarios.GridRunner.run`, via
     `ScenarioGrid.packet_len_bits`) call this.
+
+    ``strict=True`` (the serving-admission mode, DESIGN.md §11) raises a
+    ValueError instead of warning: a long-lived server rejects the one
+    inconsistent request rather than letting the mismatch ride silently.
     """
     if recorded_bits is None:
         return True
     implied = errors.packet_len_bits(seg_len)
     if int(recorded_bits) == implied:
         return True
+    msg = (
+        f"network PER model uses {int(recorded_bits)}-bit packets but "
+        f"seg_len={seg_len} transmits {implied}-bit segments; pass "
+        "packet_len_bits=cfg.packet_len_bits to the network builder "
+        "for a self-consistent channel (the paper's own defaults "
+        "carry this mismatch)"
+    )
+    if strict:
+        raise ValueError(msg)
     pair = (int(recorded_bits), int(seg_len))
     if pair not in _WARNED_PACKET_PAIRS:
         _WARNED_PACKET_PAIRS.add(pair)
-        warnings.warn(
-            f"network PER model uses {int(recorded_bits)}-bit packets but "
-            f"seg_len={seg_len} transmits {implied}-bit segments; pass "
-            "packet_len_bits=cfg.packet_len_bits to the network builder "
-            "for a self-consistent channel (the paper's own defaults "
-            "carry this mismatch)",
-            PacketLengthMismatchWarning,
-            stacklevel=3,
-        )
+        warnings.warn(msg, PacketLengthMismatchWarning, stacklevel=3)
     return False
 
 
@@ -397,11 +420,7 @@ def build_sim(
     """
     from repro.core import aggregation
 
-    if eval_every < 1 or n_rounds % eval_every:
-        raise ValueError(
-            f"eval_every={eval_every} must be >= 1 and divide "
-            f"n_rounds={n_rounds} (metrics keep a static shape)"
-        )
+    validate_eval_schedule(n_rounds, eval_every)
     agg_impl = aggregation.resolve_impl(agg_impl)
     n = data.n_clients
     p = jnp.asarray(data.weights())

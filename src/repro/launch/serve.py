@@ -16,6 +16,19 @@ from repro.configs import base as cfgbase
 from repro.models import registry
 
 
+def first_token(logits: jax.Array) -> jax.Array:
+    """Greedy next token from step logits, sliced consistently.
+
+    `prefill_step` returns the last-position logits already reduced to
+    ``(batch, vocab)``, while `serve_step` returns ``(batch, 1, vocab)``
+    — slice the trailing position only when it exists, so both call
+    sites agree on which position feeds the argmax.
+    """
+    if logits.ndim == 3:
+        logits = logits[:, -1]
+    return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-1.6b")
@@ -27,18 +40,21 @@ def main() -> None:
 
     cfg = cfgbase.smoke_variant(cfgbase.get(args.arch))
     bundle = registry.build(cfg)
-    key = jax.random.PRNGKey(0)
-    params = bundle.init(key)
+    # Independent streams: correlating prompt tokens (or modal embeds)
+    # with the parameter init would make the smoke run unrepresentative.
+    k_params, k_tokens, k_modal = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = bundle.init(k_params)
 
     b, s = args.batch, args.prompt_len
-    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    batch = {"tokens": jax.random.randint(k_tokens, (b, s), 0, cfg.vocab)}
     if registry.needs_modal(cfg):
         t = cfg.enc_seq if cfg.family == "enc_dec" else cfg.n_modal_tokens
-        batch["modal_embeds"] = jax.random.normal(key, (b, t, cfg.d_model))
+        batch["modal_embeds"] = jax.random.normal(k_modal, (b, t, cfg.d_model))
 
     prefill = jax.jit(lambda p, bt: bundle.prefill_step(p, bt, window=args.window))
     t0 = time.time()
     logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
     print(f"prefill: batch={b} len={s} -> cache ready "
           f"({time.time()-t0:.2f}s)", flush=True)
 
@@ -55,17 +71,21 @@ def main() -> None:
     serve = jax.jit(
         lambda p, c, t, pos: bundle.serve_step(p, c, t, pos, window=args.window)
     )
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    tok = first_token(logits)
     generated = [tok]
+    n_steps = args.gen - 1
     t0 = time.time()
-    for i in range(args.gen - 1):
+    for i in range(n_steps):
         logits, cache = serve(params, cache, tok, jnp.int32(s + i))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        tok = first_token(logits)
         generated.append(tok)
-    out = jnp.concatenate(generated, axis=1)
+    jax.block_until_ready(tok)
     dt = time.time() - t0
-    print(f"decode: {args.gen} tokens x batch {b} in {dt:.2f}s "
-          f"({args.gen * b / max(dt, 1e-9):.1f} tok/s)")
+    out = jnp.concatenate(generated, axis=1)
+    # The timer brackets exactly n_steps serve_step calls (the first token
+    # falls out of prefill above), so that is what the rate counts.
+    print(f"decode: {n_steps} steps x batch {b} in {dt:.2f}s "
+          f"({n_steps * b / max(dt, 1e-9):.1f} tok/s)")
     print("sample token ids:", out[0].tolist())
 
 

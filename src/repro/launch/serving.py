@@ -1,0 +1,462 @@
+"""Streaming scenario-serving engine: continuous batching over warm grids.
+
+`GridRunner` made repeated grid dispatches cheap; this module makes them
+*continuous* (DESIGN.md §11).  A `ScenarioServer` accepts scenario-grid
+requests on an async queue and returns futures; behind the queue, a
+batcher thread coalesces whatever requests arrived within a small window
+into one grid (via `ScenarioGrid.concat`, which re-pads node counts and
+time axes), and a dispatch thread runs the coalesced batch through a warm
+`GridRunner` — per-(protocol, mode) grouping preserved, partial batches
+padded to declared bucket sizes with the existing routing-neutral filler,
+compiled programs served from a bounded LRU cache.  The two threads form a
+double-buffered pipeline: host-side admission + coalescing + padding for
+batch k+1 overlaps device compute for batch k.
+
+    server = ScenarioServer(init, apply_fn, data, cfg,
+                            serve=ServeConfig(max_batch=8))
+    with server:
+        server.warmup(pool_grid)           # compile declared shapes
+        fut = server.submit(request_grid)  # -> Future[GridResult]
+        res = fut.result()
+
+Correctness contract: the coalesce -> pad -> dispatch -> unpad pipeline is
+BIT-IDENTICAL to a direct `run_grid` of the same scenarios (fillers are
+dropped on unpad; vmap rows are independent) — enforced by
+tests/test_serving.py and re-asserted by benchmarks/bench_serve.py.
+
+Request admission is validated synchronously in `submit`
+(`GridRunner.validate`): a malformed request raises an actionable
+`AdmissionError` naming its offending scenarios, and the warm server keeps
+serving everyone else.  Telemetry (requests/sec, queue depth, batch fill
+ratio, cache hit/miss, latency percentiles) flows through the pluggable
+`repro.launch.tracker` API — pure host-side bookkeeping, no device syncs
+on the hot path.
+
+CLI demo (synthetic open-loop arrival process; see also
+benchmarks/bench_serve.py for the measured version):
+
+  PYTHONPATH=src python -m repro.launch.serving --requests 16 --rate 50
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.data.synthetic import FederatedDataset
+from repro.fl import scenarios, simulator
+from repro.launch import tracker as launch_tracker
+
+Pytree = object
+
+# Queue sentinel: tells the batcher / dispatcher threads to exit.
+_SHUTDOWN = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-engine knobs (DESIGN.md §11).
+
+    ``max_batch`` caps how many scenarios one coalesced dispatch carries;
+    ``batch_buckets`` declares the warm padded batch sizes (each
+    (protocol, mode) group pads to the smallest bucket that fits, so the
+    compiled-program family stays bounded); ``max_delay_s`` is how long the
+    batcher waits for more requests after the first arrives (the classic
+    throughput/latency knob of continuous batching); ``pipeline_depth`` is
+    the number of coalesced batches in flight (2 = double buffering:
+    batching/admission for batch k+1 overlaps compute for batch k);
+    ``max_cached_programs`` bounds the runner's compiled-program LRU;
+    ``strict_packet_check`` makes the PER-packet vs codec-segment mismatch
+    an admission ERROR instead of a one-time warning.
+    """
+
+    max_batch: int = 8
+    batch_buckets: tuple[int, ...] = (1, 2, 4, 8)
+    max_delay_s: float = 0.002
+    pipeline_depth: int = 2
+    max_cached_programs: int | None = 16
+    strict_packet_check: bool = True
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.pipeline_depth < 2:
+            raise ValueError(
+                f"pipeline_depth must be >= 2 (one batch computing + at "
+                f"least one being prepared), got {self.pipeline_depth}"
+            )
+        if self.batch_buckets and max(self.batch_buckets) < self.max_batch:
+            raise ValueError(
+                f"largest batch bucket {max(self.batch_buckets)} is smaller "
+                f"than max_batch={self.max_batch}: a full coalesced batch "
+                "would never fit a warm shape"
+            )
+
+
+@dataclasses.dataclass
+class _Request:
+    grid: scenarios.ScenarioGrid
+    future: Future
+    t_submit: float
+
+
+@dataclasses.dataclass
+class _Dispatch:
+    """One prepared dispatch: a coalesced grid plus the per-request row
+    slices needed to split the stacked result back out."""
+
+    grid: scenarios.ScenarioGrid
+    requests: list[_Request]
+    slices: list[tuple[int, int]]
+
+
+def _slice_result(res: scenarios.GridResult, a: int, b: int,
+                  labels: list[str]) -> scenarios.GridResult:
+    """Rows [a, b) of a stacked result, relabeled with the REQUEST's own
+    labels (coalescing may have disambiguated collisions across requests;
+    each caller gets its grid's labels back untouched)."""
+    return scenarios.GridResult(
+        acc=res.acc[a:b],
+        loss=res.loss[a:b],
+        bias=res.bias[a:b],
+        labels=list(labels),
+        selected=None if res.selected is None else res.selected[a:b],
+    )
+
+
+class ScenarioServer:
+    """Continuously batching scenario-serving engine over a warm GridRunner.
+
+    Args:
+      init_fn / apply_fn / data / cfg: the `GridRunner` binding (model,
+        dataset, static simulation knobs).  ``cfg`` is validated eagerly —
+        e.g. an ``eval_every`` that does not divide ``n_rounds`` fails
+        HERE, at construction, not inside a warm dispatch
+        (`simulator.validate_eval_schedule`).
+      serve: `ServeConfig` engine knobs.
+      tracker: metrics sink; defaults to a fresh `StatsTracker` exposed as
+        ``self.tracker`` (pass `NullTracker()` to disable).
+      devices: forwarded to `GridRunner` (sharded serving uses the same
+        mesh machinery as one-shot grids).
+
+    Lifecycle: `start()` spawns the batcher + dispatcher threads; `stop()`
+    drains the queue and joins them (also available as a context manager).
+    `submit` is thread-safe and non-blocking apart from admission
+    validation.
+    """
+
+    def __init__(
+        self,
+        init_fn: Callable,
+        apply_fn: Callable,
+        data: FederatedDataset,
+        cfg: simulator.SimConfig,
+        *,
+        serve: ServeConfig = ServeConfig(),
+        tracker: launch_tracker.Tracker | None = None,
+        devices=None,
+    ):
+        self.cfg = serve
+        self.tracker = (launch_tracker.StatsTracker()
+                        if tracker is None else tracker)
+        # Fail actionably NOW on static-config errors (eval_every etc.) —
+        # GridRunner construction builds the sim and validates them.
+        self.runner = scenarios.GridRunner(
+            init_fn, apply_fn, data, cfg,
+            devices=devices,
+            tracker=self.tracker,
+            max_cached_programs=serve.max_cached_programs,
+        )
+        self._requests: queue.Queue = queue.Queue()
+        # The double buffer: at most pipeline_depth batches in flight
+        # (pipeline_depth - 1 queue slots + the one the dispatcher is
+        # executing); a full queue backpressures the BATCHER, never
+        # `submit` (the request queue is unbounded — open-loop admission).
+        self._dispatches: queue.Queue = queue.Queue(
+            maxsize=serve.pipeline_depth - 1
+        )
+        self._batcher: threading.Thread | None = None
+        self._dispatcher: threading.Thread | None = None
+        self._started = False
+        self._stopped = False
+
+    # -- lifecycle ----------------------------------------------------
+
+    def start(self) -> "ScenarioServer":
+        if self._started:
+            raise RuntimeError("server already started")
+        self._started = True
+        self._batcher = threading.Thread(
+            target=self._batch_loop, name="scenario-server-batcher",
+            daemon=True,
+        )
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="scenario-server-dispatcher",
+            daemon=True,
+        )
+        self._batcher.start()
+        self._dispatcher.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain queued requests, then join the worker threads.
+
+        Requests submitted before `stop` complete normally (their futures
+        resolve); `submit` after `stop` raises.
+        """
+        if not self._started or self._stopped:
+            self._stopped = True
+            return
+        self._stopped = True
+        self._requests.put(_SHUTDOWN)
+        self._batcher.join()
+        self._dispatcher.join()
+
+    def __enter__(self) -> "ScenarioServer":
+        return self.start() if not self._started else self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API ---------------------------------------------------
+
+    def warmup(self, *grids: scenarios.ScenarioGrid) -> int:
+        """AOT-compile the programs the declared grids would dispatch
+        (per-(protocol, mode) groups at their padded bucket sizes) before
+        opening for traffic.  Returns the number of programs compiled.
+
+        Warm the shapes you expect to DISPATCH: for a coalescing server
+        that is representative coalesced batches
+        (``ScenarioGrid.concat(*request_mix)``), not individual requests —
+        a coalesced batch maps fields (protocol, topology) that a
+        single-request grid hoists, which is a different program.  Call
+        before `start()` (compilation is not synchronized with the
+        dispatch thread)."""
+        if self._started:
+            raise RuntimeError("warmup() must run before start()")
+        return sum(
+            self.runner.warmup(g, pad_to=self.cfg.batch_buckets)
+            for g in grids
+        )
+
+    def submit(self, grid: scenarios.ScenarioGrid) -> Future:
+        """Enqueue one scenario-grid request; returns a Future[GridResult].
+
+        Admission validation happens HERE, synchronously: a malformed
+        request raises `scenarios.AdmissionError` (naming its offending
+        scenarios) without ever touching the serving threads — one bad
+        request cannot kill a warm server.
+        """
+        if not self._started or self._stopped:
+            raise RuntimeError(
+                "server is not accepting requests (start() it / not after "
+                "stop())"
+            )
+        if len(grid) == 0:
+            raise scenarios.AdmissionError("grid rejected: empty request")
+        self.runner.validate(
+            grid, strict_packet=self.cfg.strict_packet_check
+        )
+        fut: Future = Future()
+        self.tracker.count("serve/requests")
+        self.tracker.count("serve/scenarios", len(grid))
+        self.tracker.gauge("serve/queue_depth", self._requests.qsize() + 1)
+        self._requests.put(_Request(grid, fut, time.monotonic()))
+        return fut
+
+    def serve(self, grids: Sequence[scenarios.ScenarioGrid]
+              ) -> list[scenarios.GridResult]:
+        """Submit a sequence of requests and wait for all results (in
+        submission order) — the synchronous convenience wrapper."""
+        futures = [self.submit(g) for g in grids]
+        return [f.result() for f in futures]
+
+    # -- batcher thread: queue -> coalesce ----------------------------
+
+    def _batch_loop(self) -> None:
+        carry: _Request | None = None
+        while True:
+            req = carry if carry is not None else self._requests.get()
+            carry = None
+            if req is _SHUTDOWN:
+                self._dispatches.put(_SHUTDOWN)
+                return
+            batch = [req]
+            n = len(req.grid)
+            shutdown_after = False
+            deadline = time.monotonic() + self.cfg.max_delay_s
+            while n < self.cfg.max_batch:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    break
+                try:
+                    nxt = self._requests.get(timeout=timeout)
+                except queue.Empty:
+                    break
+                if nxt is _SHUTDOWN:
+                    shutdown_after = True
+                    break
+                if n + len(nxt.grid) > self.cfg.max_batch:
+                    carry = nxt        # opens the NEXT batch
+                    break
+                batch.append(nxt)
+                n += len(nxt.grid)
+            self._enqueue_dispatches(batch)
+            if shutdown_after:
+                self._dispatches.put(_SHUTDOWN)
+                return
+
+    def _enqueue_dispatches(self, batch: list[_Request]) -> None:
+        """Coalesce a batch of requests into one grid (slices remembered
+        per request) and hand it to the dispatch thread.
+
+        `ScenarioGrid.concat` re-pads node counts and time axes, fills
+        missing participation/policy fields neutrally, and disambiguates
+        colliding labels — so heterogeneous requests still share one
+        dispatch.  Requests concat CANNOT merge (e.g. with/without
+        per-client local_epochs, or incommensurable schedule lengths)
+        fall back to one dispatch each, counted as
+        ``serve/coalesce_fallback``.
+        """
+        if len(batch) == 1:
+            grids = [batch[0].grid]
+            groups = [batch]
+        else:
+            try:
+                grids = [scenarios.ScenarioGrid.concat(
+                    *(r.grid for r in batch))]
+                groups = [batch]
+            except ValueError:
+                self.tracker.count("serve/coalesce_fallback")
+                grids = [r.grid for r in batch]
+                groups = [[r] for r in batch]
+        for grid, reqs in zip(grids, groups):
+            slices, start = [], 0
+            for r in reqs:
+                slices.append((start, start + len(r.grid)))
+                start += len(r.grid)
+            self.tracker.count("serve/dispatches")
+            self.tracker.observe("serve/coalesced_scenarios", len(grid))
+            self._dispatches.put(_Dispatch(grid, list(reqs), slices))
+
+    # -- dispatch thread: pad -> dispatch -> unpad --------------------
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            d = self._dispatches.get()
+            if d is _SHUTDOWN:
+                return
+            t0 = time.monotonic()
+            try:
+                # Admission already validated per request; grouping +
+                # bucket padding + program-cache lookup happen inside the
+                # warm runner.  Converting the result to numpy is the
+                # device sync (result materialization, not telemetry).
+                res = self.runner.run(
+                    d.grid, pad_to=self.cfg.batch_buckets, validate=False,
+                )
+            except Exception as e:   # keep serving: fail THIS batch only
+                self.tracker.count("serve/dispatch_errors")
+                for r in d.requests:
+                    if not r.future.cancelled():
+                        r.future.set_exception(e)
+                continue
+            now = time.monotonic()
+            self.tracker.observe("serve/dispatch_s", now - t0)
+            for r, (a, b) in zip(d.requests, d.slices):
+                if not r.future.cancelled():
+                    r.future.set_result(
+                        _slice_result(res, a, b, r.grid.labels)
+                    )
+                self.tracker.observe(
+                    "serve/latency_s", now - r.t_submit
+                )
+
+
+# ---------------------------------------------------------------------
+# CLI demo: a tiny standalone server fed by a synthetic open-loop
+# arrival process (the measured benchmark version lives in
+# benchmarks/bench_serve.py).
+# ---------------------------------------------------------------------
+
+def _demo_setup(n_clients: int, samples: int, seed: int):
+    from repro.core import topology
+    from repro.data import synthetic
+    from repro.models import smallnets
+
+    data = synthetic.fed_image_classification(
+        n_clients=n_clients, samples_per_client=samples, seed=seed
+    )
+    coords = topology.TABLE_II_COORDS[:n_clients]
+    nets = [
+        # packet_len_bits matches the demo cfg's 64-float32 segments, so
+        # the channel is self-consistent and strict admission passes.
+        (f"net{i}", topology.make_network(
+            coords, edge_density=d, n_clients=n_clients, tx_power_dbm=17.0,
+            packet_len_bits=32 * 64,
+        ))
+        for i, d in enumerate((0.4, 0.6, 0.8))
+    ]
+    init = lambda k: smallnets.init_mlp_clf(k, d_in=32, d_hidden=16)
+    return data, nets, init, smallnets.apply_mlp_clf
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="mean arrival rate (requests/sec, Poisson)")
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    data, nets, init, apply_fn = _demo_setup(args.clients, 20, args.seed)
+    cfg = simulator.SimConfig(n_rounds=args.rounds, local_epochs=2,
+                              seg_len=64)
+    pool = [
+        scenarios.ScenarioGrid.product(
+            networks=[(lbl, net)], protocols=[(proto, "ra_normalized")],
+            seeds=[args.seed],
+        )
+        for lbl, net in nets
+        for proto in ("ra", "aayg")
+    ]
+    server = ScenarioServer(
+        init, apply_fn, data, cfg,
+        serve=ServeConfig(max_batch=args.max_batch),
+    )
+    # Warm both the single-request shapes and a representative coalesced
+    # mix (coalescing maps fields a lone request hoists).
+    compiled = server.warmup(*pool, scenarios.ScenarioGrid.concat(*pool))
+    print(f"warmup: {compiled} program(s) compiled", flush=True)
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.monotonic()
+    with server:
+        futures = []
+        for i in range(args.requests):
+            time.sleep(rng.exponential(1.0 / args.rate))
+            futures.append(server.submit(pool[i % len(pool)]))
+        results = [f.result() for f in futures]
+    dt = time.monotonic() - t0
+
+    snap = server.tracker.snapshot()
+    print(f"served {len(results)} requests in {dt:.2f}s "
+          f"({len(results) / dt:.1f} req/s)")
+    for k in ("serve/latency_s_p50", "serve/latency_s_p99",
+              "serve/coalesced_scenarios_mean", "grid/batch_fill_mean",
+              "cache/hit", "cache/miss", "cache/evict"):
+        if k in snap:
+            print(f"  {k} = {snap[k]:.4g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Pluggable metrics trackers for the serving tier (DESIGN.md §11).
+
+The serving engine (`repro.launch.serving.ScenarioServer`) and the grid
+program cache (`repro.fl.scenarios.ProgramCache`) record their telemetry
+through this abstraction: counters (requests, cache hits/misses/evictions),
+gauges (queue depth), and observation series (per-request latency, batch
+fill ratio, dispatch time) from which p50/p99 summaries are derived.
+
+Hot-path contract: every recording method is pure host-side bookkeeping.
+Implementations must never inspect device values (no `block_until_ready`,
+no `np.asarray` of a jax array), so recording a metric cannot force a host
+sync or perturb the dispatch pipeline — the same discipline levanter's
+tracker API enforces for training loops.  Aggregation (percentiles, means)
+happens at `snapshot()` time, off the hot path.
+
+Public API
+----------
+  Tracker           the interface: count / gauge / observe
+  NullTracker       no-op (the default for callers that don't measure)
+  StatsTracker      thread-safe in-memory aggregation + snapshot()
+  CompositeTracker  fan-out to several trackers
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Iterable
+
+import numpy as np
+
+
+class Tracker:
+    """Metrics sink interface.
+
+    ``count`` accumulates a monotonically increasing counter, ``gauge``
+    overwrites a point-in-time value, ``observe`` appends one sample to a
+    distribution series (latencies, fill ratios).  All three take plain
+    Python numbers — callers convert BEFORE recording, never the tracker.
+    """
+
+    def count(self, name: str, n: int = 1) -> None:
+        raise NotImplementedError
+
+    def gauge(self, name: str, value: float) -> None:
+        raise NotImplementedError
+
+    def observe(self, name: str, value: float) -> None:
+        raise NotImplementedError
+
+
+class NullTracker(Tracker):
+    """Discards everything (zero overhead, the default sink)."""
+
+    def count(self, name: str, n: int = 1) -> None:
+        pass
+
+    def gauge(self, name: str, value: float) -> None:
+        pass
+
+    def observe(self, name: str, value: float) -> None:
+        pass
+
+
+class StatsTracker(Tracker):
+    """Thread-safe in-memory aggregation.
+
+    Observation series keep the most recent ``max_samples`` values (a
+    bounded deque, so a long-lived server cannot leak through its own
+    telemetry); counters and gauges are plain dicts.  `snapshot()` returns
+    a flat ``{name: value}`` dict with ``<series>_p50`` / ``_p99`` /
+    ``_mean`` / ``_count`` summaries — the machine-readable form
+    `benchmarks/bench_serve.py` writes to BENCH_serve.json.
+    """
+
+    def __init__(self, max_samples: int = 65536):
+        self._lock = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._series: dict[str, deque] = {}
+        self._max_samples = max_samples
+
+    def count(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + n
+
+    def gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            if name not in self._series:
+                self._series[name] = deque(maxlen=self._max_samples)
+            self._series[name].append(float(value))
+
+    def reset(self) -> None:
+        """Drop all recorded state (e.g. between a priming phase and a
+        measured steady-state phase of a benchmark)."""
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._series.clear()
+
+    # -- read side (off the hot path) ---------------------------------
+
+    def counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    def samples(self, name: str) -> list[float]:
+        with self._lock:
+            return list(self._series.get(name, ()))
+
+    def percentile(self, name: str, q: float) -> float:
+        """The q-th percentile (0..100) of an observation series (NaN if
+        the series is empty)."""
+        vals = self.samples(name)
+        if not vals:
+            return float("nan")
+        return float(np.percentile(np.asarray(vals), q))
+
+    def snapshot(self) -> dict[str, float]:
+        """Flat dict of every counter, gauge, and series summary."""
+        with self._lock:
+            out: dict[str, float] = dict(self._counters)
+            out.update(self._gauges)
+            series = {k: list(v) for k, v in self._series.items()}
+        for name, vals in series.items():
+            arr = np.asarray(vals, np.float64)
+            out[f"{name}_count"] = len(vals)
+            out[f"{name}_mean"] = float(arr.mean())
+            out[f"{name}_p50"] = float(np.percentile(arr, 50))
+            out[f"{name}_p99"] = float(np.percentile(arr, 99))
+            out[f"{name}_max"] = float(arr.max())
+        return out
+
+
+class CompositeTracker(Tracker):
+    """Fan one recording stream out to several sinks."""
+
+    def __init__(self, trackers: Iterable[Tracker]):
+        self._trackers = tuple(trackers)
+
+    def count(self, name: str, n: int = 1) -> None:
+        for t in self._trackers:
+            t.count(name, n)
+
+    def gauge(self, name: str, value: float) -> None:
+        for t in self._trackers:
+            t.gauge(name, value)
+
+    def observe(self, name: str, value: float) -> None:
+        for t in self._trackers:
+            t.observe(name, value)

@@ -1,0 +1,278 @@
+"""Serving tier: queued batching == direct dispatch + cache/tracker units."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.data import synthetic
+from repro.fl import scenarios, simulator
+from repro.launch import serving, tracker
+from repro.models import smallnets
+
+# Packet length consistent with seg_len=64 float32 segments so the
+# server's strict admission check passes by default.
+_PACKET_BITS = 32 * 64
+
+
+def _setup(n_clients=3):
+    data = synthetic.fed_image_classification(
+        n_clients=n_clients, samples_per_client=20, seed=0
+    )
+    coords = topology.TABLE_II_COORDS[:n_clients]
+    nets = [
+        topology.make_network(
+            coords, edge_density=d, packet_len_bits=_PACKET_BITS,
+            n_clients=n_clients, tx_power_dbm=17.0,
+        )
+        for d in (0.6, 0.8)
+    ]
+    init = lambda k: smallnets.init_mlp_clf(k, d_in=32, d_hidden=16)
+    return data, nets, init, smallnets.apply_mlp_clf
+
+
+@pytest.fixture(scope="module")
+def toy():
+    return _setup()
+
+
+def _cfg(**kw):
+    kw.setdefault("n_rounds", 3)
+    kw.setdefault("local_epochs", 2)
+    kw.setdefault("seg_len", 64)
+    return simulator.SimConfig(**kw)
+
+
+def _grid(net, proto="ra", label="g", seed=0):
+    return scenarios.ScenarioGrid.product(
+        networks=[(label, net)], protocols=[(proto, "ra_normalized")],
+        seeds=[seed],
+    )
+
+
+def _assert_same(got: scenarios.GridResult, want: scenarios.GridResult):
+    np.testing.assert_array_equal(np.asarray(got.acc), np.asarray(want.acc))
+    np.testing.assert_array_equal(np.asarray(got.loss),
+                                  np.asarray(want.loss))
+    # bias is NaN for non-R&A rows; bitwise NaN == NaN is intended.
+    assert np.array_equal(np.asarray(got.bias), np.asarray(want.bias),
+                          equal_nan=True)
+
+
+# ---------------------------------------------------------------------
+# ProgramCache / tracker units (no jax dispatch)
+# ---------------------------------------------------------------------
+
+def test_program_cache_lru_eviction_order():
+    t = tracker.StatsTracker()
+    built = []
+    cache = scenarios.ProgramCache(max_programs=2, tracker=t)
+    get = lambda k: cache.lookup(k, lambda: built.append(k) or f"prog-{k}")
+
+    assert get("a") == "prog-a" and get("b") == "prog-b"
+    assert get("a") == "prog-a"          # refresh: "a" is now most recent
+    get("c")                             # evicts "b", the LRU entry
+    assert built == ["a", "b", "c"]
+    get("a")                             # still cached
+    get("b")                             # rebuilt: was evicted
+    assert built == ["a", "b", "c", "b"]
+    assert cache.stats["programs"] == 2
+    assert cache.evictions == 2          # b then a
+    assert t.counter("cache/evict") == 2
+    assert t.counter("cache/hit") == cache.hits
+    assert t.counter("cache/miss") == cache.misses == 4
+
+
+def test_program_cache_unbounded_by_default():
+    cache = scenarios.ProgramCache()
+    for i in range(64):
+        cache.lookup(i, lambda i=i: i)
+    assert cache.stats["programs"] == 64 and cache.evictions == 0
+
+
+def test_stats_tracker_snapshot_and_reset():
+    t = tracker.StatsTracker()
+    t.count("req", 2)
+    t.count("req")
+    t.gauge("depth", 7)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        t.observe("lat", v)
+    snap = t.snapshot()
+    assert snap["req"] == 3 and snap["depth"] == 7
+    assert snap["lat_count"] == 4 and snap["lat_mean"] == 2.5
+    assert snap["lat_p50"] == 2.5 and snap["lat_max"] == 4.0
+    assert t.percentile("lat", 50) == 2.5
+    assert np.isnan(t.percentile("missing", 50))
+    t.reset()
+    assert t.snapshot() == {}
+
+
+def test_composite_tracker_fans_out():
+    a, b = tracker.StatsTracker(), tracker.StatsTracker()
+    c = tracker.CompositeTracker([a, b])
+    c.count("n")
+    c.observe("x", 1.5)
+    assert a.counter("n") == b.counter("n") == 1
+    assert a.samples("x") == b.samples("x") == [1.5]
+
+
+def test_first_token_slices_both_logit_ranks():
+    from repro.launch.serve import first_token
+
+    last = jnp.asarray([[0.1, 0.9, 0.0], [0.8, 0.1, 0.1]])      # (B, V)
+    stacked = jnp.stack([last * 0 - 1.0, last], axis=1)          # (B, 2, V)
+    want = np.asarray([[1], [0]])
+    np.testing.assert_array_equal(np.asarray(first_token(last)), want)
+    np.testing.assert_array_equal(np.asarray(first_token(stacked)), want)
+    assert first_token(last).dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------
+# Admission validation
+# ---------------------------------------------------------------------
+
+def test_bad_eval_every_fails_at_server_construction(toy):
+    data, nets, init, apply_fn = toy
+    with pytest.raises(ValueError, match="eval_every"):
+        serving.ScenarioServer(init, apply_fn, data,
+                               _cfg(n_rounds=3, eval_every=2))
+
+
+def test_admission_rejects_malformed_grid_and_keeps_serving(toy):
+    data, nets, init, apply_fn = toy
+    good = _grid(nets[0], label="ok")
+    bad = _grid(nets[0], label="broken")
+    bad = dataclasses.replace(
+        bad,
+        scenarios=bad.scenarios._replace(
+            protocol_id=np.asarray([99], np.int32)),
+    )
+    empty = dataclasses.replace(
+        good, labels=[],
+        scenarios=jax.tree.map(lambda l: l[:0], good.scenarios),
+    )
+    with serving.ScenarioServer(init, apply_fn, data, _cfg()) as server:
+        with pytest.raises(scenarios.AdmissionError,
+                           match=r"protocol_id.*'broken"):
+            server.submit(bad)
+        with pytest.raises(scenarios.AdmissionError, match="empty"):
+            server.submit(empty)
+        res = server.submit(good).result(timeout=300)
+    assert res.labels == good.labels     # warm server survived the reject
+
+
+def test_strict_packet_mismatch_is_an_admission_error(toy):
+    data, nets, init, apply_fn = toy
+    mismatched_net = topology.make_network(
+        topology.TABLE_II_COORDS[:3], edge_density=0.8,
+        packet_len_bits=25_000, n_clients=3, tx_power_dbm=17.0,
+    )
+    server = serving.ScenarioServer(init, apply_fn, data, _cfg())
+    with server:
+        with pytest.raises(scenarios.AdmissionError, match="packet"):
+            server.submit(_grid(mismatched_net))
+
+
+def test_grid_runner_validate_raises_out_of_range_lr(toy):
+    data, nets, init, apply_fn = toy
+    g = _grid(nets[0], label="nan-lr")
+    g = dataclasses.replace(
+        g, scenarios=g.scenarios._replace(
+            lr=np.asarray([np.nan], np.float32)),
+    )
+    runner = scenarios.GridRunner(init, apply_fn, data, _cfg())
+    with pytest.raises(scenarios.AdmissionError, match=r"lr.*'nan-lr"):
+        runner.validate(g)
+
+
+# ---------------------------------------------------------------------
+# Bit-identity: queued serving == direct run_grid
+# ---------------------------------------------------------------------
+
+def test_coalesced_mixed_protocol_serving_bit_identical(toy):
+    """Back-to-back requests (mixed protocols, distinct topologies)
+    coalesce into ONE dispatch and still match per-request run_grid."""
+    data, nets, init, apply_fn = toy
+    cfg = _cfg()
+    requests = [
+        _grid(nets[0], "ra", "r0"),
+        _grid(nets[1], "aayg", "r1"),
+        _grid(nets[1], "ra", "r2"),
+    ]
+    refs = [scenarios.run_grid(init, apply_fn, data, g, cfg)
+            for g in requests]
+    server = serving.ScenarioServer(
+        init, apply_fn, data, cfg,
+        serve=serving.ServeConfig(max_batch=8, max_delay_s=0.25),
+    )
+    with server:
+        got = server.serve(requests)
+    for g, r in zip(got, refs):
+        _assert_same(g, r)
+        assert g.labels == r.labels
+    snap = server.tracker.snapshot()
+    assert snap["serve/dispatches"] == 1          # genuinely coalesced
+    assert snap["serve/requests"] == 3
+
+
+def test_partial_batch_bucket_padding_bit_identical(toy):
+    """A 3-scenario dispatch padded to a 4-bucket with routing-neutral
+    filler returns the unpadded rows bit-identically."""
+    data, nets, init, apply_fn = toy
+    cfg = _cfg()
+    grid = scenarios.ScenarioGrid.concat(
+        _grid(nets[0], "ra", "a"), _grid(nets[1], "ra", "b"),
+        _grid(nets[0], "aayg", "c"),
+    )
+    runner = scenarios.GridRunner(init, apply_fn, data, cfg)
+    want = runner.run(grid)                       # unpadded reference
+    tr = tracker.StatsTracker()
+    padded_runner = scenarios.GridRunner(init, apply_fn, data, cfg,
+                                         tracker=tr)
+    got = padded_runner.run(grid, pad_to=(4,))
+    _assert_same(got, want)
+    fills = tr.samples("grid/batch_fill")
+    assert fills and all(f <= 1.0 for f in fills)
+    assert min(fills) < 1.0                       # some group really padded
+
+
+def test_serving_across_cache_eviction_rewarm_cycle(toy):
+    """max_cached_programs=1 forces evict/re-compile between alternating
+    shapes; results stay identical to an unbounded-cache runner."""
+    data, nets, init, apply_fn = toy
+    cfg = _cfg()
+    small = _grid(nets[0], "ra", "small")
+    big = scenarios.ScenarioGrid.concat(_grid(nets[0], "ra", "x"),
+                                        _grid(nets[1], "ra", "y"))
+    ref = scenarios.GridRunner(init, apply_fn, data, cfg)
+    want = [ref.run(small), ref.run(big), ref.run(small)]
+
+    tr = tracker.StatsTracker()
+    bounded = scenarios.GridRunner(init, apply_fn, data, cfg,
+                                   tracker=tr, max_cached_programs=1)
+    got = [bounded.run(small), bounded.run(big), bounded.run(small)]
+    for g, w in zip(got, want):
+        _assert_same(g, w)
+    assert bounded.programs.evictions >= 2        # small->big->small
+    assert tr.counter("cache/evict") == bounded.programs.evictions
+    assert bounded.programs.stats["programs"] == 1
+
+
+def test_warmup_precompiles_dispatch_shapes(toy):
+    data, nets, init, apply_fn = toy
+    cfg = _cfg()
+    reqs = [_grid(nets[0], "ra", "w0"), _grid(nets[1], "aayg", "w1")]
+    server = serving.ScenarioServer(init, apply_fn, data, cfg)
+    compiled = server.warmup(*reqs, scenarios.ScenarioGrid.concat(*reqs))
+    assert compiled >= 1
+    misses_before = server.runner.programs.misses
+    with server:
+        got = server.serve(reqs)
+    assert server.runner.programs.misses == misses_before  # all warm
+    assert [g.labels for g in got] == [r.labels for r in reqs]
+    with pytest.raises(RuntimeError, match="start"):
+        server.warmup(reqs[0])                    # post-start is an error
+    with pytest.raises(RuntimeError, match="not accepting"):
+        server.submit(reqs[0])                    # stopped server rejects
