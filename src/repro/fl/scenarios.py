@@ -308,6 +308,27 @@ class ScenarioGrid:
         """The i-th scalar Scenario (host-side slice of the batch)."""
         return jax.tree.map(lambda leaf: leaf[i], self.scenarios)
 
+    def take(self, indices: Sequence[int]) -> "ScenarioGrid":
+        """The sub-grid of the given rows (host-side fancy indexing).
+
+        The partial-batch re-slice primitive of the serving tier
+        (DESIGN.md §12): when some requests of a coalesced dispatch are
+        cancelled or expire before the dispatch runs, the dispatcher keeps
+        only the surviving rows instead of burning device time on dead
+        ones.  Leaves stay host-side numpy; labels and packet lengths
+        follow the selection.
+        """
+        idx = np.asarray(indices, np.intp)
+        if idx.ndim != 1:
+            raise ValueError(f"take() needs a 1-D index list, got {idx.shape}")
+        return ScenarioGrid(
+            scenarios=jax.tree.map(
+                lambda leaf: np.asarray(leaf)[idx], self.scenarios
+            ),
+            labels=[self.labels[int(i)] for i in idx],
+            packet_len_bits=self.packet_len_bits,
+        )
+
     @staticmethod
     def concat(*grids: "ScenarioGrid") -> "ScenarioGrid":
         """Join grids into one batch, re-padding link matrices to a common V
@@ -746,6 +767,22 @@ def _bucket_target(g: int, pad_to) -> int:
     return -(-g // top) * top
 
 
+def _stack_rows(*leaves):
+    """Stack per-row metric leaves back into the grid axis.
+
+    Rows dispatched on different ``('grid',)`` meshes — the per-group
+    mesh shrink gives a 2-row group a 2-device mesh while a 1-row group
+    runs on 1 device — live on different device sets, which `jnp.stack`
+    refuses to mix.  Commit such rows to a common device first; rows
+    from a single mesh (the common case) stack directly, transfer-free.
+    """
+    device_sets = {frozenset(l.devices()) for l in leaves
+                   if hasattr(l, "devices")}
+    if len(device_sets) > 1:
+        leaves = tuple(jax.device_put(l, jax.devices()[0]) for l in leaves)
+    return jnp.stack(leaves)
+
+
 class ProgramCache:
     """Bounded LRU cache of AOT-compiled grid programs (DESIGN.md §11).
 
@@ -1081,7 +1118,7 @@ class GridRunner:
             # Unpad: filler rows (j >= len(idx)) are simply never read.
             for j, i in enumerate(idx):
                 rows[i] = jax.tree.map(lambda leaf: leaf[j], metrics)
-        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *rows)
+        stacked = jax.tree.map(_stack_rows, *rows)
         return _metrics_to_grid_result(stacked, grid.labels)
 
     def warmup(self, grid: ScenarioGrid, *,
@@ -1163,9 +1200,8 @@ class GridRunner:
                 leaf, NamedSharding(mesh, getattr(specs, name)))
             for name, leaf in args._asdict().items()
         })
-        mesh_key = (axis_name,) + tuple(dev.id for dev in mesh.devices.flat)
-        sig = ("shard", tuple(axes._asdict().items()), mesh_key,
-               _aval_sig(args))
+        sig = ("shard", tuple(axes._asdict().items()),
+               launch_mesh.mesh_fingerprint(mesh), _aval_sig(args))
 
         def build():
             sharded = shard_map(

@@ -62,3 +62,21 @@ def grid_mesh(devices: Sequence[jax.Device] | int | None = None) -> jax.sharding
             )
         devices = avail[:devices]
     return jax.sharding.Mesh(np.asarray(list(devices)), (GRID_AXIS,))
+
+
+def mesh_fingerprint(mesh: jax.sharding.Mesh) -> tuple:
+    """A hashable host-side identity for a mesh: axis names + platform +
+    device ids.
+
+    The compiled-program cache key component (`repro.fl.scenarios.
+    ProgramCache`): two dispatches may share an executable only when they
+    target the SAME devices under the same axis layout, so a serving tier
+    that switches device subsets (1-device vs full mesh, or a shrunk mesh
+    for a small batch) keeps one warm program per subset instead of
+    silently reusing a program compiled for different hardware.  Reads
+    only device metadata — no device sync.
+    """
+    return (
+        tuple(mesh.axis_names),
+        tuple((d.platform, d.id) for d in mesh.devices.flat),
+    )

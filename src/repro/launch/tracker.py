@@ -15,10 +15,17 @@ happens at `snapshot()` time, off the hot path.
 
 Public API
 ----------
-  Tracker           the interface: count / gauge / observe
+  Tracker           the interface: count / gauge / observe / scoped
   NullTracker       no-op (the default for callers that don't measure)
   StatsTracker      thread-safe in-memory aggregation + snapshot()
   CompositeTracker  fan-out to several trackers
+
+`Tracker.scoped(prefix)` returns a view that prepends ``prefix/`` to
+every metric name — the multi-tenant attribution primitive of the
+serving tier (DESIGN.md §12): one shared `StatsTracker` holds every
+tenant's series side by side (``tenant/<name>/latency_s`` ...), and a
+scoped view costs one string join per recording, still with no device
+syncs.
 """
 from __future__ import annotations
 
@@ -47,6 +54,11 @@ class Tracker:
     def observe(self, name: str, value: float) -> None:
         raise NotImplementedError
 
+    def scoped(self, prefix: str) -> "Tracker":
+        """A view of this tracker with ``prefix/`` prepended to every
+        metric name (per-tenant / per-stream attribution)."""
+        return _PrefixTracker(self, prefix)
+
 
 class NullTracker(Tracker):
     """Discards everything (zero overhead, the default sink)."""
@@ -59,6 +71,29 @@ class NullTracker(Tracker):
 
     def observe(self, name: str, value: float) -> None:
         pass
+
+    def scoped(self, prefix: str) -> "Tracker":
+        return self                     # nothing to attribute to
+
+
+class _PrefixTracker(Tracker):
+    """Name-prefixing view over another tracker (see `Tracker.scoped`)."""
+
+    def __init__(self, inner: Tracker, prefix: str):
+        self._inner = inner
+        self._prefix = prefix
+
+    def count(self, name: str, n: int = 1) -> None:
+        self._inner.count(f"{self._prefix}/{name}", n)
+
+    def gauge(self, name: str, value: float) -> None:
+        self._inner.gauge(f"{self._prefix}/{name}", value)
+
+    def observe(self, name: str, value: float) -> None:
+        self._inner.observe(f"{self._prefix}/{name}", value)
+
+    def scoped(self, prefix: str) -> Tracker:
+        return _PrefixTracker(self._inner, f"{self._prefix}/{prefix}")
 
 
 class StatsTracker(Tracker):

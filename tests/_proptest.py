@@ -63,18 +63,23 @@ def given(*strategies: _Strategy):
 
     def deco(fn):
         n_examples = getattr(fn, "_proptest_max_examples", _DEFAULT_EXAMPLES)
+        params = list(inspect.signature(fn).parameters.values())
+        # The strategies fill the TRAILING parameters (hypothesis
+        # convention); bind them by NAME so pytest fixtures — which pytest
+        # passes as keywords — coexist with drawn values.
+        drawn_names = [p.name for p in params[-len(strategies):]]
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             rng = np.random.default_rng(_SEED)
             for _ in range(n_examples):
-                drawn = tuple(s.draw(rng) for s in strategies)
-                fn(*args, *drawn, **kwargs)
+                drawn = dict(zip(drawn_names,
+                                 (s.draw(rng) for s in strategies)))
+                fn(*args, **kwargs, **drawn)
 
-        # Hide the strategy-filled (trailing) parameters from pytest, which
-        # would otherwise try to resolve them as fixtures; keep any leading
+        # Hide the strategy-filled parameters from pytest, which would
+        # otherwise try to resolve them as fixtures; keep any leading
         # ones (real fixtures) visible.
-        params = list(inspect.signature(fn).parameters.values())
         wrapper.__signature__ = inspect.Signature(params[:-len(strategies)])
         del wrapper.__wrapped__
         return wrapper

@@ -1,0 +1,74 @@
+"""Fault injection for the serving tier (tests/test_serving_faults.py).
+
+`install(server, ...)` wraps the server's `GridRunner.run` so the Nth
+dispatch (0-based, counted per `run` call) raises a planted exception or
+stalls for a planted duration before running — the two failure modes the
+server must survive (DESIGN.md §12): a poisoned dispatch fails only its
+own batch's futures, a stalled dispatch trips per-request deadlines via
+the reaper thread without wedging the batcher.
+
+The wrapper also records, per call, the number of grid rows actually
+dispatched — the observable for "a cancelled/expired request never
+occupies device time" (the dispatcher's re-slice drops its rows).
+
+    probe = install(server, raise_on={1: RuntimeError("boom")},
+                    stall_on={0: 0.5})
+    ...
+    assert probe.calls == 3
+    assert probe.rows == [2, 1, 2]     # dispatch 1 re-sliced to 1 row
+
+Install BEFORE `server.start()`: the wrapper swaps an instance attribute
+on the runner, which is not synchronized with the dispatcher thread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping
+
+
+@dataclasses.dataclass
+class DispatchProbe:
+    """Call log + fault plan for one wrapped `GridRunner.run`."""
+
+    raise_on: dict
+    stall_on: dict
+    calls: int = 0
+    rows: list = dataclasses.field(default_factory=list)
+    labels: list = dataclasses.field(default_factory=list)
+
+
+def install(server, *, raise_on: Mapping[int, Exception] | None = None,
+            stall_on: Mapping[int, float] | None = None) -> DispatchProbe:
+    """Wrap ``server.runner.run`` with the given fault plan.
+
+    Args:
+      server: a `repro.launch.serving.ScenarioServer` (not yet started).
+      raise_on: dispatch index -> exception instance to raise INSTEAD of
+        running that dispatch.
+      stall_on: dispatch index -> seconds to sleep BEFORE running that
+        dispatch (simulates a slow/hung device program; combines with
+        ``raise_on`` — stall first, then raise).
+
+    Returns the `DispatchProbe` recording every call.
+    """
+    if getattr(server, "_started", False):
+        raise RuntimeError("install fault injection before server.start()")
+    probe = DispatchProbe(raise_on=dict(raise_on or {}),
+                          stall_on=dict(stall_on or {}))
+    runner = server.runner
+    orig_run = runner.run
+
+    def run_with_faults(grid, **kwargs):
+        i = probe.calls
+        probe.calls += 1
+        probe.rows.append(len(grid))
+        probe.labels.append(list(grid.labels))
+        if i in probe.stall_on:
+            time.sleep(probe.stall_on[i])
+        if i in probe.raise_on:
+            raise probe.raise_on[i]
+        return orig_run(grid, **kwargs)
+
+    runner.run = run_with_faults
+    return probe

@@ -1,0 +1,225 @@
+"""Property/stress tier for the serving engine (DESIGN.md §12).
+
+Seeded randomized interleavings of submit / cancel / stop across threads
+(plus a pre-start warmup), asserting the one invariant everything else in
+the serving tier hangs off: **every accepted future terminates** — with a
+result, `CancelledError`, `DeadlineExceeded`, or `ServerStopped` — and no
+thread deadlocks.  Runs unchanged on one device and on the CI
+forced-8-device mesh (``XLA_FLAGS=--xla_force_host_platform_device_count=8``):
+``devices=jax.devices()`` whenever more than one device exists, so the
+same interleavings also exercise the sharded dispatch path.
+
+Seeding comes from `hypothesis` when installed, else the dependency-free
+replay shim in tests/_proptest.py — the property tier never silently
+skips.
+"""
+import threading
+import time
+from concurrent.futures import CancelledError, wait
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # bare env: seeded-draw fallback
+    from _proptest import given, settings, st
+
+import jax
+
+from repro.core import topology
+from repro.data import synthetic
+from repro.fl import scenarios, simulator
+from repro.launch import serving
+
+_PACKET_BITS = 32 * 64
+_N_WORKERS = 3
+_OPS_PER_WORKER = 12
+
+
+def _devices():
+    """The serving mesh for this environment: sharded when the platform
+    exposes more than one device (the CI serve-stress job forces 8 host
+    devices), single-device vmap otherwise."""
+    devs = jax.devices()
+    return devs if len(devs) > 1 else None
+
+
+@pytest.fixture(scope="module")
+def toy():
+    data = synthetic.fed_image_classification(
+        n_clients=3, samples_per_client=20, seed=0
+    )
+    coords = topology.TABLE_II_COORDS[:3]
+    net = topology.make_network(
+        coords, edge_density=0.7, packet_len_bits=_PACKET_BITS,
+        n_clients=3, tx_power_dbm=17.0,
+    )
+    from repro.models import smallnets
+    init = lambda k: smallnets.init_mlp_clf(k, d_in=32, d_hidden=16)
+    cfg = simulator.SimConfig(n_rounds=1, local_epochs=1, seg_len=64)
+    grids = [
+        scenarios.ScenarioGrid.product(
+            networks=[("net", net)], protocols=[("ra", "ra_normalized")],
+            seeds=[s],
+        )
+        for s in range(4)
+    ]
+    return data, init, smallnets.apply_mlp_clf, cfg, grids
+
+
+_TERMINAL = (serving.ServerStopped, serving.DeadlineExceeded)
+
+
+def _drive(toy, seed: int) -> None:
+    """One randomized interleaving: build + warm a server, race _N_WORKERS
+    submit/cancel threads against a stop at a random point, then assert
+    every accepted future terminated in an allowed state."""
+    data, init, apply_fn, cfg, grids = toy
+    rng = np.random.default_rng(seed)
+    tenants = ("alice", "bob")
+    server = serving.ScenarioServer(
+        init, apply_fn, data, cfg,
+        serve=serving.ServeConfig(
+            max_batch=int(rng.integers(1, 5)),
+            max_delay_s=float(rng.uniform(0.0, 0.02)),
+            tenant_weights={"alice": 3.0, "bob": 1.0},
+        ),
+        devices=_devices(),
+    )
+    server.warmup(grids[0])              # pre-start warmup is part of the
+    server.start()                       # interleaving under test
+
+    futures: list = []
+    fut_lock = threading.Lock()
+    rejected = threading.Event()
+
+    def worker(wseed: int) -> None:
+        wrng = np.random.default_rng(wseed)
+        for _ in range(_OPS_PER_WORKER):
+            op = wrng.random()
+            try:
+                if op < 0.7:             # submit (mixed priority/SLA/tenant)
+                    f = server.submit(
+                        grids[int(wrng.integers(0, len(grids)))],
+                        priority=int(wrng.random() < 0.3),
+                        deadline_s=(float(wrng.uniform(0.005, 0.5))
+                                    if wrng.random() < 0.3 else None),
+                        tenant=tenants[int(wrng.integers(0, 2))],
+                    )
+                    with fut_lock:
+                        futures.append(f)
+                else:                    # cancel a random earlier future
+                    with fut_lock:
+                        pick = (futures[int(wrng.integers(0, len(futures)))]
+                                if futures else None)
+                    if pick is not None:
+                        pick.cancel()
+            except serving.ServerStopped:
+                rejected.set()
+                return
+            if wrng.random() < 0.5:
+                time.sleep(float(wrng.uniform(0.0, 0.003)))
+
+    threads = [
+        threading.Thread(target=worker, args=(int(rng.integers(2**31)),))
+        for _ in range(_N_WORKERS)
+    ]
+    for t in threads:
+        t.start()
+    time.sleep(float(rng.uniform(0.0, 0.15)))
+    drain = bool(rng.integers(0, 2))
+    server.stop(drain=drain)
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "worker thread deadlocked"
+
+    done, not_done = wait(futures, timeout=300)
+    assert not not_done, (
+        f"{len(not_done)} accepted futures never terminated "
+        f"(seed={seed}, drain={drain})"
+    )
+    n_results = 0
+    for f in done:
+        if f.cancelled():
+            continue
+        exc = f.exception(timeout=0)
+        if exc is None:
+            res = f.result(timeout=0)
+            assert len(res.labels) == 1
+            n_results += 1
+        else:
+            assert isinstance(exc, _TERMINAL), (
+                f"unexpected terminal state {type(exc).__name__}: {exc} "
+                f"(seed={seed}, drain={drain})"
+            )
+    if drain and not rejected.is_set():
+        # Drain stop + no rejected submit: cancellations and deadlines may
+        # eat some, but the stream as a whole must have been served.
+        assert n_results > 0
+    server.stop()                        # idempotent after the race
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_random_interleavings_every_future_terminates(toy, seed):
+    _drive(toy, seed)
+
+
+def test_cancel_storm_no_deadlock(toy):
+    """Cancel every future immediately after submit, from the submitting
+    threads, while the server runs: nothing wedges, the server still
+    serves a fresh request afterwards."""
+    data, init, apply_fn, cfg, grids = toy
+    server = serving.ScenarioServer(
+        init, apply_fn, data, cfg,
+        serve=serving.ServeConfig(max_batch=4, max_delay_s=0.005),
+        devices=_devices(),
+    )
+    server.warmup(grids[0])
+    futures: list = []
+    lock = threading.Lock()
+
+    def storm():
+        for _ in range(20):
+            try:
+                f = server.submit(grids[0])
+            except serving.ServerStopped:
+                return
+            f.cancel()
+            with lock:
+                futures.append(f)
+
+    with server:
+        threads = [threading.Thread(target=storm) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+            assert not t.is_alive()
+        survivor = server.submit(grids[1])
+        assert survivor.result(timeout=300) is not None
+    done, not_done = wait(futures, timeout=300)
+    assert not not_done
+    for f in done:
+        if not f.cancelled():
+            exc = f.exception(timeout=0)
+            assert exc is None or isinstance(exc, _TERMINAL)
+
+
+def test_expired_deadline_terminates_even_while_idle(toy):
+    """A deadline fires from the reaper even when batcher/dispatcher are
+    idle — the SLA does not depend on traffic to be enforced."""
+    data, init, apply_fn, cfg, grids = toy
+    server = serving.ScenarioServer(
+        init, apply_fn, data, cfg,
+        # A delay window far longer than the SLA: only the reaper can
+        # fail this request on time.
+        serve=serving.ServeConfig(max_batch=8, max_delay_s=5.0),
+        devices=_devices(),
+    )
+    with server:
+        f = server.submit(grids[0], deadline_s=0.05)
+        with pytest.raises(serving.DeadlineExceeded):
+            f.result(timeout=2.0)
