@@ -1,0 +1,77 @@
+"""Transformer next-word prediction through the scenario engine
+(DESIGN.md §13).
+
+The model-zoo wiring end-to-end: the registry's tiny decoder LM
+(`registry.sim_model("transformer_nwp")`) trains on the Markov
+char-stream corpus (`synthetic.fed_char_stream`) over the Table-II
+network, dispatched as ONE batched `run_grid` — the same engine every
+MLP figure uses, now carrying a transformer's segment rows.  Protocol
+comparison (R&A vs CFL vs no-exchange) at CPU-tractable scale; token
+accuracy is the metric (vocab 90, so chance is ~0.011).
+
+Emits ``BENCH_nwp.json`` (machine-readable perf trajectory; CI's
+perf-smoke job uploads it as an artifact).  Tiny mode for CI smoke:
+``REPRO_BENCH_TINY=1`` shrinks rounds/seeds so the module is a
+smoke test, not a measurement.  ``REPRO_GRID_DEVICES=k`` shards the
+dispatch (common.py).
+"""
+import os
+import time
+
+from benchmarks import common
+from repro.data import synthetic
+from repro.fl import scenarios, simulator
+from repro.models import registry
+
+PROTOCOLS = (("ra", "ra_normalized"), ("cfl", "ra_normalized"),
+             ("none", "ra_normalized"))
+VOCAB = 90
+SEQ_LEN = 16
+N_CLIENTS = 10
+SEG_LEN = 64
+
+
+def _tiny() -> bool:
+    return os.environ.get("REPRO_BENCH_TINY", "").strip() not in ("", "0")
+
+
+def main() -> None:
+    n_rounds, seeds, seqs = (2, 1, 8) if _tiny() else (10, 2, 32)
+    net = common.standard_net(packet_len_bits=25_000,
+                              tx_power_dbm=common.HARSH_TX_DBM)
+    model = registry.sim_model("transformer_nwp", vocab=VOCAB)
+    data = synthetic.fed_char_stream(
+        n_clients=N_CLIENTS, vocab=VOCAB, seq_len=SEQ_LEN,
+        sequences_per_client=seqs, test_sequences=2 * seqs, iid=False,
+        seed=0,
+    )
+    cfg = simulator.SimConfig(n_rounds=n_rounds, seg_len=SEG_LEN,
+                              local_epochs=1, lr=0.5)
+    grid = scenarios.ScenarioGrid.product(
+        networks=[("tab2", net)], protocols=PROTOCOLS, seeds=range(seeds),
+    )
+    t0 = time.time()
+    res = scenarios.run_grid(model.init_fn, model.apply_fn, data, grid, cfg,
+                             devices=common.grid_devices())
+    t_total = time.time() - t0
+    us = t_total * 1e6 / len(grid)
+    rows: list[dict] = []
+    for label, one in res.items():
+        acc = float(one.mean_acc[-1])
+        common.emit(f"fig_nwp/{label}", us, f"final_token_acc={acc:.4f}")
+        rows.append({"name": f"fig_nwp/{label}", "us_per_call": round(us, 1),
+                     "final_token_acc": round(acc, 4),
+                     "model": "transformer_nwp",
+                     "model_id": model.model_id})
+    rows.append({"name": "fig_nwp/timing",
+                 "us_per_call": round(t_total * 1e6, 1),
+                 "scenarios": len(grid), "rounds": n_rounds,
+                 "seg_len": SEG_LEN, "vocab": VOCAB})
+    common.emit("fig_nwp/timing", t_total * 1e6,
+                f"scenarios={len(grid)};one_dispatch_s={t_total:.2f};"
+                f"rounds={n_rounds}")
+    common.write_bench("nwp", rows)
+
+
+if __name__ == "__main__":
+    main()

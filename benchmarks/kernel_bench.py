@@ -94,6 +94,50 @@ def bench_ra_aggregate(rows, key) -> None:
          impl="pallas", max_err=err)
 
 
+def bench_ra_transformer_scale(rows, key) -> None:
+    """Transformer-scale segment axis: the shapes the 2-D mesh feeds the
+    kernel (DESIGN.md §13).
+
+    L = ceil(P_model / K) for a registry NWP transformer — the FULL
+    segment axis (Dm=1) and the per-device local shard of a 2-way model
+    axis (Dm=2, L_local = ceil(L / 2)), which is exactly what each
+    shard_map program hands `ops.ra_aggregate`.
+    """
+    import numpy as np
+
+    from repro.models import registry
+
+    tiny = _tiny()
+    model, k, n = (("transformer_nwp", 128, 4) if tiny
+                   else ("nwp:qwen2_5_3b", 512, 10))
+    m = registry.sim_model(model, vocab=90)
+    shapes = jax.eval_shape(m.init_fn, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    l_full = -(-n_params // k)
+    for dm in (1, 2):
+        l = -(-l_full // dm)
+        ks = jax.random.split(jax.random.fold_in(key, dm), 3)
+        w = jax.random.normal(ks[0], (n, l, k))
+        p = jax.nn.softmax(jax.random.normal(ks[1], (n,)))
+        e = jax.random.uniform(ks[2], (n, n, l)) < 0.9
+        e = e | jnp.eye(n, dtype=jnp.bool_)[:, :, None]
+        want, us_ref = common.timed(
+            lambda: jax.block_until_ready(
+                ref.ra_aggregate_ref(w, p, e.astype(jnp.float32))),
+            repeats=2,
+        )
+        got, us_pal = common.timed(
+            lambda: jax.block_until_ready(ops.ra_aggregate(w, p, e)),
+            repeats=2,
+        )
+        err = _check(f"ra_transformer_dm{dm}", got, want)
+        _row(rows, f"kernel/ra_transformer_dm{dm}_pallas", us_pal,
+             f"model={model};P={n_params};L={l};K={k};"
+             f"ref_us={us_ref:.1f};allclose_err={err:.2e}",
+             shape=[n, l, k], impl="pallas", max_err=err, model=model,
+             model_shards=dm)
+
+
 def bench_rwkv6(rows, key) -> None:
     b, s, h, d = (1, 64, 2, 32) if _tiny() else (1, 256, 4, 64)
     ks = jax.random.split(key, 5)
@@ -144,6 +188,7 @@ def main() -> None:
     key = jax.random.PRNGKey(0)
     rows: list[dict] = []
     bench_ra_aggregate(rows, key)
+    bench_ra_transformer_scale(rows, jax.random.fold_in(key, 3))
     bench_rwkv6(rows, jax.random.fold_in(key, 1))
     bench_flash_attention(rows, jax.random.fold_in(key, 2))
     common.write_bench("kernels", rows)

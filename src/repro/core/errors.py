@@ -74,6 +74,28 @@ def unsegment(seg: jnp.ndarray, m_params: int) -> jnp.ndarray:
     return seg.reshape(n, -1)[:, :m_params]
 
 
+def local_slice(full: jnp.ndarray, n_local: int,
+                seg_start: jnp.ndarray) -> jnp.ndarray:
+    """Slice a full-segment-axis tensor to a model-shard's local window.
+
+    ``full`` carries the GLOBAL segment axis last (e.g. an (N, N, S) success
+    mask sampled at the full segment count); the local window is
+    ``[seg_start, seg_start + n_local)`` with ``seg_start`` traced (it comes
+    from ``lax.axis_index('model') * n_local`` inside a shard_map).  The
+    global axis is zero-padded by ``n_local`` first so every window that
+    contains ANY real segment is in-bounds — `lax.dynamic_slice` clamps
+    out-of-range starts, which would otherwise SHIFT a straddling window
+    onto the wrong real segments.  Windows made entirely of padding may
+    still clamp; their values are irrelevant (zero segments stay zero under
+    every protocol — see `repro.core.protocols`).
+    """
+    pad = [(0, 0)] * (full.ndim - 1) + [(0, n_local)]
+    padded = jnp.pad(full, pad)
+    return jax.lax.dynamic_slice_in_dim(
+        padded, seg_start, n_local, axis=full.ndim - 1
+    )
+
+
 def sample_success(
     key: jax.Array,
     rho: jnp.ndarray,

@@ -66,9 +66,11 @@ def ra_round_seg(
     participation: jnp.ndarray | None = None,
     *,
     agg_impl: str | None = None,
+    seg_total: int | None = None,
+    seg_start: jnp.ndarray | int = 0,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """R&A local aggregation on segments; returns (out, e) with the sampled
-    (N, N, L) success mask (packed bool_) exposed for bias/Λ diagnostics.
+    success mask (packed bool_) exposed for bias/Λ diagnostics.
 
     With a ``participation`` mask (N,), sampled-out senders are removed
     from ``e`` (adaptive normalization renormalizes over the sampled
@@ -76,15 +78,28 @@ def ra_round_seg(
     segments untouched.  ``participation=None`` keeps the exact static
     trace.  ``agg_impl`` selects the aggregation substrate (STATIC — see
     `aggregation.apply_mode`).
+
+    Model-axis sharding (DESIGN.md §13): with ``seg_total=S`` (STATIC, the
+    GLOBAL segment count) the success mask is sampled at the FULL
+    (N, N, S) shape from the shared ``key`` and then sliced to this
+    shard's ``[seg_start, seg_start + L_local)`` window — every shard
+    draws the same uniforms, so the per-global-segment masks (and with
+    them the aggregated model) are bitwise identical to the unsharded
+    run.  The returned ``e`` is the FULL (participation-masked) mask, so
+    the bias diagnostic reduces over every global segment on every shard
+    (replicated, equal to the unsharded value).  ``seg_total=None`` (the
+    default) keeps the exact single-shard trace.
     """
-    n = w_seg.shape[0]
-    e = errors.sample_success(key, rho, w_seg.shape[1], n_clients=n)
-    if participation is None:
-        return aggregation.apply_mode(mode_id, w_seg, p, e,
-                                      impl=agg_impl), e
-    e = aggregation.mask_senders(e, participation)
-    out = aggregation.apply_mode(mode_id, w_seg, p, e, impl=agg_impl)
-    return aggregation.keep_nonparticipants(participation, out, w_seg), e
+    n, l = w_seg.shape[0], w_seg.shape[1]
+    e = errors.sample_success(key, rho, l if seg_total is None else seg_total,
+                              n_clients=n)
+    if participation is not None:
+        e = aggregation.mask_senders(e, participation)
+    e_loc = e if seg_total is None else errors.local_slice(e, l, seg_start)
+    out = aggregation.apply_mode(mode_id, w_seg, p, e_loc, impl=agg_impl)
+    if participation is not None:
+        out = aggregation.keep_nonparticipants(participation, out, w_seg)
+    return out, e
 
 
 def aayg_round_seg(
@@ -97,6 +112,8 @@ def aayg_round_seg(
     n_mixes: int = 1,
     participation: jnp.ndarray | None = None,
     agg_impl: str | None = None,
+    seg_total: int | None = None,
+    seg_start: jnp.ndarray | int = 0,
 ) -> jnp.ndarray:
     """Aggregate-as-You-Go gossip: J = n_mixes one-hop mix iterations.
 
@@ -104,17 +121,23 @@ def aayg_round_seg(
     adjacent); only the leading N-client block participates (AaYG cannot
     exploit routing-only relay nodes — Fig. 9 note).  A ``participation``
     mask silences sampled-out clients for the WHOLE round: they neither
-    broadcast nor update in any of the J mixes.
+    broadcast nor update in any of the J mixes.  ``seg_total``/``seg_start``
+    select a model-shard window of full-segment-count mask draws (same
+    contract as `ra_round_seg`).
     """
     n, l, _ = w_seg.shape
     eps = link_eps[:n, :n]
 
     def mix(w, key):
-        u = jax.random.uniform(key, (n, n, l))
+        u = jax.random.uniform(
+            key, (n, n, l if seg_total is None else seg_total)
+        )
         e = u < eps[:, :, None]                     # packed bool_ mask
         if participation is not None:
             e = e & (participation[:n, None, None] > 0)
         e = e | jnp.eye(n, dtype=jnp.bool_)[:, :, None]  # own model present
+        if seg_total is not None:
+            e = errors.local_slice(e, l, seg_start)
         out = aggregation.apply_mode(mode_id, w, p, e, impl=agg_impl)
         if participation is not None:
             out = aggregation.keep_nonparticipants(participation[:n], out, w)
@@ -132,6 +155,9 @@ def cfl_round_seg(
     mode_id: jnp.ndarray,
     aggregator: jnp.ndarray,
     participation: jnp.ndarray | None = None,
+    *,
+    seg_total: int | None = None,
+    seg_start: jnp.ndarray | int = 0,
 ) -> jnp.ndarray:
     """C-FL benchmark: star aggregation at `aggregator` via min-PER routes.
 
@@ -147,6 +173,7 @@ def cfl_round_seg(
     fail.
     """
     n, l, k = w_seg.shape
+    l_draw = l if seg_total is None else seg_total
     kup, kdn = jax.random.split(key)
     aggregator = jnp.asarray(aggregator, jnp.int32)
     if participation is not None:
@@ -156,12 +183,14 @@ def cfl_round_seg(
 
     # Uplink success mask for each sender/segment, destination = aggregator.
     rho_up = jnp.take(rho[:n], aggregator, axis=1)            # (N,)
-    e_up = (jax.random.uniform(kup, (n, l)) < rho_up[:, None]).astype(
+    e_up = (jax.random.uniform(kup, (n, l_draw)) < rho_up[:, None]).astype(
         jnp.float32
     )
     e_up = e_up.at[aggregator].set(1.0)
     if participation is not None:
         e_up = e_up * participation[:, None]
+    if seg_total is not None:
+        e_up = errors.local_slice(e_up, l, seg_start)
     w_own = jnp.take(w_seg, aggregator, axis=0)               # (L, K)
 
     def _normalized(_):
@@ -178,12 +207,14 @@ def cfl_round_seg(
 
     # Downlink: erroneous global segments replaced by the receiver's own.
     rho_dn = jnp.take(rho[:, :n], aggregator, axis=0)         # (N,)
-    e_dn = (jax.random.uniform(kdn, (n, l)) < rho_dn[:, None]).astype(
+    e_dn = (jax.random.uniform(kdn, (n, l_draw)) < rho_dn[:, None]).astype(
         jnp.float32
     )
     e_dn = e_dn.at[aggregator].set(1.0)
     if participation is not None:
         e_dn = e_dn * participation[:, None]
+    if seg_total is not None:
+        e_dn = errors.local_slice(e_dn, l, seg_start)
     return e_dn[:, :, None] * g[None] + (1.0 - e_dn)[:, :, None] * w_seg
 
 
@@ -210,6 +241,8 @@ def dispatch_round_seg(
     participation: jnp.ndarray | None = None,
     agg_impl: str | None = None,
     track_bias: bool = True,
+    seg_total: int | None = None,
+    seg_start: jnp.ndarray | int = 0,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One exchange round with a fully traced (protocol, mode, aggregator).
 
@@ -217,6 +250,16 @@ def dispatch_round_seg(
     mask for R&A (packed bool_; all-ones for other protocols) and ``bias``
     is the mean ||Lambda_l||_F^2 diagnostic (NaN where undefined, 0 for
     ideal C-FL) — matching the scalar simulator's per-protocol bookkeeping.
+
+    ``seg_total``/``seg_start`` (DESIGN.md §13) run the exchange on a
+    model-axis shard: ``w_seg`` is the LOCAL (N, L_local, K) window of a
+    global (N, S=seg_total, K) segment tensor starting at traced segment
+    ``seg_start``.  Every success indicator is sampled at the FULL segment
+    count from the shared key and sliced to the local window, so sharded
+    and unsharded runs draw bitwise-identical masks per global segment;
+    ``e`` (and with it the bias diagnostic) stays FULL-width (N, N, S) —
+    replicated across shards.  ``seg_total=None`` keeps the exact
+    single-shard trace.
 
     ``participation`` (optional (N,) client sampling mask) threads through
     every branch: sampled-out clients contribute to no aggregation and keep
@@ -232,24 +275,28 @@ def dispatch_round_seg(
     `aggregation.bias_sq_norm_fused` drop out of the hot loop).
     """
     n, l, _ = w_seg.shape
-    e_ones = jnp.ones((n, n, l), jnp.bool_)
+    e_ones = jnp.ones((n, n, l if seg_total is None else seg_total),
+                      jnp.bool_)
     nan = jnp.asarray(jnp.nan, jnp.float32)
 
     def b_ra(_):
         out, e = ra_round_seg(w_seg, p, rho, key, mode_id, participation,
-                              agg_impl=agg_impl)
+                              agg_impl=agg_impl, seg_total=seg_total,
+                              seg_start=seg_start)
         bias = (jnp.mean(aggregation.bias_sq_norm_fused(p, e))
                 if track_bias else nan)
         return out, e, bias
 
     def b_aayg(_):
         out = aayg_round_seg(w_seg, p, link_eps, key, mode_id, n_mixes=n_mixes,
-                             participation=participation, agg_impl=agg_impl)
+                             participation=participation, agg_impl=agg_impl,
+                             seg_total=seg_total, seg_start=seg_start)
         return out, e_ones, nan
 
     def b_cfl(_):
         out = cfl_round_seg(w_seg, p, rho, key, mode_id, aggregator,
-                            participation)
+                            participation, seg_total=seg_total,
+                            seg_start=seg_start)
         return out, e_ones, nan
 
     def b_ideal(_):

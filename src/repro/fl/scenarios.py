@@ -218,12 +218,15 @@ def sampling_schedule(n_clients: int, n_rounds: int, fraction: float, *,
 
 def _resolve_grid_mesh(devices: DeviceSpec,
                        sharding: Any) -> jax.sharding.Mesh | None:
-    """Normalize the `devices=` / `sharding=` knobs into a 1-D mesh.
+    """Normalize the `devices=` / `sharding=` knobs into a grid mesh.
 
-    ``sharding`` wins over ``devices``; it may be a `jax.sharding.Mesh`
-    (must be 1-D) or a `NamedSharding` (its mesh is used).  ``devices`` is
-    anything `launch.mesh.grid_mesh` accepts.  Both None -> None (the
-    single-device vmap path).
+    ``sharding`` wins over ``devices``; it may be a `jax.sharding.Mesh` —
+    1-D (any axis name, the grid axis) or 2-D ``('grid', 'model')``
+    (DESIGN.md §13) — or a `NamedSharding` (its mesh is used).
+    ``devices`` is anything `launch.mesh.grid_mesh` accepts, or a
+    ``(spec, model_shards)`` tuple building a 2-D
+    `launch.mesh.grid_model_mesh`.  Both None -> None (the single-device
+    vmap path).
     """
     if sharding is not None:
         if isinstance(sharding, NamedSharding):
@@ -231,12 +234,27 @@ def _resolve_grid_mesh(devices: DeviceSpec,
         if not isinstance(sharding, jax.sharding.Mesh):
             raise TypeError(f"sharding= must be a Mesh or NamedSharding, "
                             f"got {type(sharding).__name__}")
-        if len(sharding.axis_names) != 1:
-            raise ValueError("grid sharding needs a 1-D mesh, got axes "
-                             f"{sharding.axis_names}")
+        names = sharding.axis_names
+        if len(names) == 2:
+            if tuple(names) != (launch_mesh.GRID_AXIS,
+                                launch_mesh.MODEL_AXIS):
+                raise ValueError(
+                    "2-D grid sharding needs axes "
+                    f"('{launch_mesh.GRID_AXIS}', "
+                    f"'{launch_mesh.MODEL_AXIS}'), got {names} "
+                    "(see launch.mesh.grid_model_mesh)"
+                )
+        elif len(names) != 1:
+            raise ValueError("grid sharding needs a 1-D or 2-D mesh, got "
+                             f"axes {names}")
         return sharding
     if devices is None:
         return None
+    if (isinstance(devices, tuple) and len(devices) == 2
+            and isinstance(devices[1], int)
+            and not isinstance(devices[0], jax.Device)):
+        spec, model_shards = devices
+        return launch_mesh.grid_model_mesh(spec, model_shards=model_shards)
     return launch_mesh.grid_mesh(devices)
 
 
@@ -1009,13 +1027,21 @@ class GridRunner:
         tracker: launch_tracker.Tracker | None = None,
         max_cached_programs: int | None = None,
     ):
-        self.sim = simulator.build_sim(
+        self._build_sim = lambda dm: simulator.build_sim(
             init_fn, apply_fn, data,
             seg_len=cfg.seg_len, local_epochs=cfg.local_epochs,
             n_rounds=cfg.n_rounds, aayg_mixes=cfg.aayg_mixes,
             agg_impl=cfg.agg_impl, eval_every=cfg.eval_every,
-            track_bias=cfg.track_bias,
+            track_bias=cfg.track_bias, model_shards=dm,
+            model_axis=launch_mesh.MODEL_AXIS,
         )
+        self.sim = self._build_sim(1)
+        # One SimPrograms binding per model-axis width (DESIGN.md §13):
+        # `model_shards` is static (it sizes the local segment window), so
+        # a runner serving 1-D and 2-D meshes side by side keeps one sim
+        # per Dm — tiny host objects; the heavy compiled programs live in
+        # the bounded ProgramCache below.
+        self._sims: dict[int, simulator.SimPrograms] = {1: self.sim}
         self.devices = devices
         self.tracker = tracker or launch_tracker.NullTracker()
         self._seg_len = cfg.seg_len
@@ -1029,6 +1055,12 @@ class GridRunner:
         # round-loop state against its inputs).  No-op on CPU.
         self._donate = simulator.donate_kwargs()
         self._scalar = jax.jit(self.sim.run_scenario, **self._donate)
+
+    def _sim_for(self, model_shards: int) -> simulator.SimPrograms:
+        sim = self._sims.get(model_shards)
+        if sim is None:
+            sim = self._sims[model_shards] = self._build_sim(model_shards)
+        return sim
 
     def validate(self, grid: ScenarioGrid, *,
                  strict_packet: bool = False) -> None:
@@ -1173,22 +1205,34 @@ class GridRunner:
                          mesh: jax.sharding.Mesh):
         """Sharded path: pad to a device multiple, shard_map the vmap.
 
-        Each device runs `vmap(run_scenario)` over its (g_pad / D)-slice;
-        scenarios are independent, so the lowered per-device program has
-        no cross-device collectives — XLA only gathers the stacked metrics
-        at the end.  The returned program's leaves keep the PADDED leading
+        Each device runs `vmap(run_scenario)` over its (g_pad / Dg)-slice;
+        scenarios are independent, so on a 1-D ``('grid',)`` mesh the
+        lowered per-device program has no cross-device collectives — XLA
+        only gathers the stacked metrics at the end.  On a 2-D
+        ``('grid', 'model')`` mesh (DESIGN.md §13) each scenario's segment
+        axis is additionally split across the ``model`` groups: the
+        per-device sim carries the local (N, L_local, K) window, training
+        `all_gather`s full rows within the group, and metrics come out
+        replicated along the model axis (out_specs name only the grid
+        axis).  The returned program's leaves keep the PADDED leading
         axis.
 
-        A mesh wider than the sub-batch is shrunk to its first g devices:
-        the excess devices would only ever compute filler trajectories.
+        A mesh whose grid axis is wider than the sub-batch is shrunk to
+        its first g grid rows (keeping every model shard): the excess
+        devices would only ever compute filler trajectories.
         """
-        (axis_name,) = mesh.axis_names
+        names = tuple(mesh.axis_names)
+        axis_name = names[0]
+        dm = int(mesh.shape[names[1]]) if len(names) == 2 else 1
+        sim = self._sim_for(dm)
         g = sub.link_eps.shape[0]
-        if mesh.devices.size > g:
+        dev = mesh.devices.reshape(-1, dm)
+        if dev.shape[0] > g:
+            dev = dev[:g]
             mesh = jax.sharding.Mesh(
-                np.asarray(list(mesh.devices.flat)[:g]), (axis_name,)
+                dev if len(names) == 2 else dev.reshape(-1), names
             )
-        d = mesh.devices.size
+        d = dev.shape[0]
         sub = _pad_scenario_batch(sub, -(-g // d) * d)
         axes, args = _hoist_uniform(sub)
         specs = simulator.Scenario(**{
@@ -1205,10 +1249,11 @@ class GridRunner:
 
         def build():
             sharded = shard_map(
-                jax.vmap(self.sim.run_scenario, in_axes=(axes,)),
+                jax.vmap(sim.run_scenario, in_axes=(axes,)),
                 mesh=mesh, in_specs=(specs,), out_specs=P(axis_name),
-                # No collectives inside; skip the replication check (it
-                # rejects some primitives in the RNG/scan body).
+                # Grid axis: no collectives inside; model axis: metrics are
+                # replicated.  Skip the replication check (it rejects some
+                # primitives in the RNG/scan body).
                 **_SHARD_MAP_NO_CHECK,
             )
             return jax.jit(sharded, **self._donate).lower(args).compile()

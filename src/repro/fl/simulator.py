@@ -39,6 +39,17 @@ sweeping policies stays one vmapped/sharded dispatch.  ``policy_id=None``
 (the default) traces the exact pre-policy program; the ``uniform`` policy
 reproduces the open-loop participation path bitwise.
 
+Segment-native state + model-axis sharding (DESIGN.md §13): the round
+scan carries the paper's exchange representation — client-stacked segment
+rows ``(N, S, seg_len)`` — natively; the pytree <-> segment codec runs
+once per `run_scenario`, at the boundary, and local training
+differentiates through the row layout.  ``build_sim(model_shards=Dm)``
+additionally shards the segment axis over a ``model`` mesh axis inside
+each scenario (`run_scenario` then runs under `shard_map`; see
+`repro.fl.scenarios` / `launch.mesh.grid_model_mesh`), and the
+``init_scan`` / ``advance_chunk`` pair exposes the scan state for the
+preemption-safe checkpoint runner (`repro.checkpoint.checkpoint`).
+
 Static compute knobs (DESIGN.md §9): `SimConfig.agg_impl` selects the
 aggregation substrate (jnp reference vs the fused/batched Pallas kernel;
 auto = native Pallas on TPU only), `eval_every=k` thins per-round metric
@@ -79,6 +90,10 @@ from repro.data.synthetic import FederatedDataset
 from repro.models.smallnets import accuracy, ce_loss
 
 Pytree = Any
+
+# Default mesh axis name for model-axis (segment) sharding — DESIGN.md §13.
+# `launch.mesh.MODEL_AXIS` re-exports it for the mesh-builder layer.
+MODEL_AXIS = "model"
 
 
 class PacketLengthMismatchWarning(UserWarning):
@@ -368,15 +383,39 @@ class SimPrograms:
     """Pure functions of one (init, apply, data, statics) binding.
 
     ``round_step(state, rng, scenario) -> (state, metrics)`` advances one
-    D-FL round; ``run_scenario(scenario) -> metrics`` scans it n_rounds
-    times.  Both are jit/vmap-safe; `run_scenario` is what `scenarios.
-    run_grid` vmaps across a grid.
+    D-FL round on the legacy pytree state; ``run_scenario(scenario) ->
+    metrics`` runs the full segment-native scan.  Both are jit/vmap-safe;
+    `run_scenario` is what `scenarios.run_grid` vmaps across a grid.
+
+    Checkpointable scan API (DESIGN.md §13): ``init_scan(scenario)`` builds
+    the segment-native scan state ``{"w": (N, L_local, K) rows, "key": key
+    [, "sig": SelectionSignals]}`` and ``advance_chunk(state, scenario, c)``
+    advances chunk ``c`` (= ``eval_every`` rounds, one metrics row).
+    `run_scenario` itself is a `lax.scan` of `advance_chunk`, so a host
+    loop that jits `advance_chunk` once and feeds chunks ``0..n_chunks-1``
+    (see `repro.checkpoint.checkpoint.run_resumable`) replays the same
+    per-chunk program whether or not it was interrupted in between —
+    that, not floating-point luck, is the bitwise-resume guarantee.
+
+    With ``model_shards > 1`` the ``"w"`` rows are the LOCAL model-axis
+    shard and `run_scenario` / `init_scan` / `advance_chunk` must run
+    inside a `shard_map` binding the ``model_axis`` axis name
+    (`scenarios.GridRunner` and `checkpoint.run_resumable` do this).
     """
 
     round_step: Callable[[dict, jax.Array, Scenario], tuple[dict, dict]]
     run_scenario: Callable[[Scenario], dict]
     n_clients: int
     n_rounds: int
+    init_scan: Callable[[Scenario], dict]
+    advance_chunk: Callable[[dict, Scenario, jnp.ndarray], tuple[dict, dict]]
+    n_chunks: int
+    eval_every: int
+    model_shards: int
+    model_axis: str
+    n_segments: int       # S: global segment count of the bound model
+    local_segments: int   # L_local = ceil(S / model_shards)
+    seg_len: int
 
 
 def build_sim(
@@ -391,8 +430,21 @@ def build_sim(
     agg_impl: str = "auto",
     eval_every: int = 1,
     track_bias: bool = True,
+    model_shards: int = 1,
+    model_axis: str = MODEL_AXIS,
 ) -> SimPrograms:
     """Bind data + statics into the pure scenario programs.
+
+    The scan state is SEGMENT-NATIVE (DESIGN.md §13): the round loop
+    carries the paper's exchange representation — client-stacked segment
+    rows ``(N, S, seg_len)`` — and the pytree <-> segment codec
+    (`protocols._to_segments` / `_from_segments`) runs exactly once per
+    `run_scenario`, at the boundary, never inside the round scan.  Local
+    training differentiates the loss *through the row layout*
+    (``jax.grad(loss ∘ leaf_views)``): reshape/split/slice are exact
+    layout moves with exact-scatter transposes, so per-leaf gradients —
+    and the trained trajectory — are bitwise what the pytree carry
+    produced.
 
     Args:
       init_fn: model init, `key -> params` pytree (one shared init; the
@@ -414,13 +466,26 @@ def build_sim(
         program (bit-identity).
       track_bias: False skips the R&A ||Lambda||^2 diagnostic (bias is NaN
         for every round; its mask reductions leave the compiled hot loop).
+      model_shards: Dm, the model-axis mesh size (static).  With
+        ``model_shards > 1`` the scan state holds only this shard's
+        ``L_local = ceil(S / Dm)`` segment window and `run_scenario` must
+        execute inside a `shard_map` binding ``model_axis``: training
+        `all_gather`s the full rows (replicated compute), the O(N²·L·K)
+        exchange runs on the local window with full-width mask draws
+        sliced per shard (`protocols.dispatch_round_seg` seg_total /
+        seg_start), and metrics come out replicated.  ``model_shards=1``
+        (default) needs no mesh and IS the single-device program.
+      model_axis: the mesh axis name the sharded program binds.
 
     Returns:
-      `SimPrograms` with `round_step` / `run_scenario` pure functions.
+      `SimPrograms` with `round_step` / `run_scenario` / `init_scan` /
+      `advance_chunk` pure functions.
     """
     from repro.core import aggregation
 
     validate_eval_schedule(n_rounds, eval_every)
+    if model_shards < 1:
+        raise ValueError(f"model_shards={model_shards} must be >= 1")
     agg_impl = aggregation.resolve_impl(agg_impl)
     n = data.n_clients
     p = jnp.asarray(data.weights())
@@ -428,106 +493,168 @@ def build_sim(
     test_x = jnp.asarray(data.test_x)
     test_y = jnp.asarray(data.test_y)
 
+    # Static segment layout, computed ONCE at build time: the scan carries
+    # (N, L_local, K) rows and every pytree view below is pure layout.
+    leaves0, treedef = jax.tree_util.tree_flatten(
+        jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    )
+    leaf_shapes = [tuple(l.shape) for l in leaves0]
+    leaf_sizes = [int(np.prod(s)) for s in leaf_shapes]
+    leaf_splits = np.cumsum(leaf_sizes)[:-1]
+    m_params = int(sum(leaf_sizes))
+    s_total = errors.num_segments(m_params, seg_len)
+    l_local = -(-s_total // model_shards)
+
+    def _leaf_views(row: jnp.ndarray) -> Pytree:
+        """One client's parameter pytree as pure layout views of its row.
+
+        ``row`` is a full (S, K) — or flattened-compatible — segment row;
+        entries past ``m_params`` are codec padding (zero, and kept zero by
+        training: the flatten-slice's transpose scatters gradient only
+        into the first ``m_params`` positions).
+        """
+        flat = row.reshape(-1)[:m_params]
+        parts = jnp.split(flat, leaf_splits)
+        return jax.tree_util.tree_unflatten(
+            treedef, [pt.reshape(sh) for pt, sh in zip(parts, leaf_shapes)]
+        )
+
+    _views_batch = jax.vmap(_leaf_views)
+
+    def _seg_start():
+        if model_shards == 1:
+            return 0
+        return jax.lax.axis_index(model_axis) * l_local
+
+    def _full_rows(w_loc: jnp.ndarray) -> jnp.ndarray:
+        """Local (N, L_local, K) shard -> full (N, S_pad, K) rows."""
+        if model_shards == 1:
+            return w_loc
+        return jax.lax.all_gather(w_loc, model_axis, axis=1, tiled=True)
+
+    def _init_rows(key: jax.Array) -> jnp.ndarray:
+        # Same init on every client (paper: common model structure + start);
+        # the ONLY _to_segments of the whole scan.
+        params0 = init_fn(key)
+        stacked = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None], (n,) + leaf.shape),
+            params0,
+        )
+        w_seg, _spec, _m = protocols._to_segments(stacked, seg_len)
+        if model_shards == 1:
+            return w_seg
+        w_seg = jnp.pad(
+            w_seg, ((0, 0), (0, l_local * model_shards - s_total), (0, 0))
+        )
+        return jax.lax.dynamic_slice_in_dim(
+            w_seg, _seg_start(), l_local, axis=1
+        )
+
     def loss(params, x, y):
         return ce_loss(apply_fn(params, x), y)
 
-    def local_train(stacked, lr, epochs=None):
+    def _row_loss(row, x, y):
+        return loss(_leaf_views(row), x, y)
+
+    def local_train(rows, lr, epochs=None):
         """Full-batch GD for `local_epochs` epochs (paper eq. 3), per client.
 
+        ``rows`` are FULL segment rows (N, S[_pad], K); the gradient flows
+        through the leaf views, so the update is the per-leaf GD step laid
+        out in row coordinates (codec padding receives zero gradient).
         ``epochs`` (optional, (N,) int32) enables heterogeneous compute: the
         scan still runs the static `local_epochs` bound, but client m's
         update is masked out after its own epoch count (values clip to the
         bound).  ``epochs=None`` keeps the exact static trace.
         """
         if epochs is None:
-            def train_one(params, x, y):
-                def body(prm, _):
-                    g = jax.grad(loss)(prm, x, y)
-                    return jax.tree.map(lambda w, gw: w - lr * gw, prm, g), None
+            def train_one(row, x, y):
+                def body(r, _):
+                    g = jax.grad(_row_loss)(r, x, y)
+                    return r - lr * g, None
 
-                params, _ = jax.lax.scan(body, params, None,
-                                         length=local_epochs)
-                return params
+                row, _ = jax.lax.scan(body, row, None, length=local_epochs)
+                return row
 
-            return jax.vmap(train_one)(stacked, xs, ys)
+            return jax.vmap(train_one)(rows, xs, ys)
 
         epochs = jnp.minimum(jnp.asarray(epochs, jnp.int32), local_epochs)
 
-        def train_one_masked(params, x, y, ep):
-            def body(prm, i):
-                g = jax.grad(loss)(prm, x, y)
-                new = jax.tree.map(lambda w, gw: w - lr * gw, prm, g)
-                prm = jax.tree.map(
-                    lambda a, b: jnp.where(i < ep, a, b), new, prm
-                )
-                return prm, None
+        def train_one_masked(row, x, y, ep):
+            def body(r, i):
+                g = jax.grad(_row_loss)(r, x, y)
+                return jnp.where(i < ep, r - lr * g, r), None
 
-            params, _ = jax.lax.scan(body, params, jnp.arange(local_epochs))
-            return params
+            row, _ = jax.lax.scan(body, row, jnp.arange(local_epochs))
+            return row
 
-        return jax.vmap(train_one_masked)(stacked, xs, ys, epochs)
+        return jax.vmap(train_one_masked)(rows, xs, ys, epochs)
 
-    def evaluate(stacked):
-        def one(params):
-            return accuracy(apply_fn(params, test_x), test_y)
+    def evaluate(rows):
+        def one(row):
+            return accuracy(apply_fn(_leaf_views(row), test_x), test_y)
 
-        return jax.vmap(one)(stacked)
+        return jax.vmap(one)(rows)
 
-    def train_loss(stacked):
-        def one(params, x, y):
-            return ce_loss(apply_fn(params, x), y)
+    def train_loss(rows):
+        return jax.vmap(_row_loss)(rows, xs, ys)
 
-        return jax.vmap(one)(stacked, xs, ys)
-
-    def _round_core(state: dict, rng: jax.Array, scenario: Scenario,
+    def _round_core(w_loc: jnp.ndarray, rng: jax.Array, scenario: Scenario,
                     part: jnp.ndarray | None):
-        """The shared round body: train -> (mask) -> exchange.
+        """The shared round body: train -> (mask) -> exchange, on rows.
 
-        ``part`` is the realized (N,) participation mask (None = full,
-        the exact pre-dynamic trace).  Returns (state, trained, bias)
-        where ``trained`` is the post-training pre-exchange stack (the
-        closed loop's update-norm signal input).  Both `_advance` and
-        `_advance_closed` run THIS code, so the open- and closed-loop
-        paths cannot drift apart — the uniform policy's bit-identity with
-        the open loop rests on it.
+        ``w_loc`` is this shard's (N, L_local, K) window (== the full
+        (N, S, K) rows when ``model_shards == 1``).  ``part`` is the
+        realized (N,) participation mask (None = full, the exact
+        pre-dynamic trace).  Returns ``(new_loc, trained_full, old_full,
+        bias)`` — the full-row trained / previous states feed the closed
+        loop's signal refresh.  Both `_advance` and `_advance_closed` run
+        THIS code, so the open- and closed-loop paths cannot drift apart —
+        the uniform policy's bit-identity with the open loop rests on it.
         """
-        trained = local_train(state["params"], scenario.lr,
-                              scenario.local_epochs)
+        w_full = _full_rows(w_loc)
+        trained = local_train(w_full, scenario.lr, scenario.local_epochs)
         if part is not None:
-            trained = jax.tree.map(
-                lambda new, old: jnp.where(
-                    part.reshape((-1,) + (1,) * (new.ndim - 1)) > 0, new, old
-                ),
-                trained, state["params"],
+            trained = jnp.where(part[:, None, None] > 0, trained, w_full)
+        if model_shards == 1:
+            w_ex = trained
+        else:
+            w_ex = jax.lax.dynamic_slice_in_dim(
+                trained, _seg_start(), l_local, axis=1
             )
-        w_seg, spec, m_params = protocols._to_segments(trained, seg_len)
-        w_seg, _e, bias = protocols.dispatch_round_seg(
-            w_seg, p, scenario.rho, scenario.link_eps, rng,
+        new_loc, _e, bias = protocols.dispatch_round_seg(
+            w_ex, p, scenario.rho, scenario.link_eps, rng,
             scenario.protocol_id, scenario.mode_id, scenario.aggregator,
             n_mixes=aayg_mixes, participation=part,
             agg_impl=agg_impl, track_bias=track_bias,
+            seg_total=None if model_shards == 1 else s_total,
+            seg_start=_seg_start(),
         )
-        out = protocols._from_segments(w_seg, spec, m_params)
-        return {"params": out}, trained, bias
+        return new_loc, trained, w_full, bias
 
-    def _advance(state: dict, rng: jax.Array, scenario: Scenario):
-        """Train + exchange, NO metric evaluation: (state, bias)."""
+    def _advance(w_loc: jnp.ndarray, rng: jax.Array, scenario: Scenario):
+        """Train + exchange, NO metric evaluation: (w_loc, bias)."""
         part = scenario.participation
         if part is not None:
             part = part[:n]
-        state, _trained, bias = _round_core(state, rng, scenario, part)
-        return state, bias
+        new_loc, _trained, _old, bias = _round_core(w_loc, rng, scenario,
+                                                    part)
+        return new_loc, bias
 
-    def _advance_closed(state: dict, rng: jax.Array, scenario_t: Scenario,
+    def _advance_closed(w_loc: jnp.ndarray, rng: jax.Array,
+                        scenario_t: Scenario,
                         signals: selection.SelectionSignals):
         """Closed-loop round (DESIGN.md §10): select -> train -> exchange.
 
         The participation mask is computed HERE, inside the scan, from the
         live ``signals`` (the policy decides who trains this round); the
         scenario's own ``participation`` schedule is the availability base.
-        Returns (state, new_signals, mask, bias) — participants' trailing
+        Returns (w_loc, new_signals, mask, bias) — participants' trailing
         loss / update-norm signals are refreshed, everyone else keeps the
-        score they last earned.
+        score they last earned.  Signals reduce over the per-leaf VIEWS of
+        the full rows, never the raw (possibly padded) rows, so their
+        reduction grouping — and the selection trajectory — is independent
+        of ``model_shards``.
         """
         base = scenario_t.participation
         base = (jnp.ones((n,), jnp.float32) if base is None
@@ -536,9 +663,9 @@ def build_sim(
             scenario_t.policy_id, base, signals, p,
             scenario_t.rho[:n, :n], scenario_t.select_frac,
         )
-        old_params = state["params"]
-        state, stacked, bias = _round_core(state, rng, scenario_t, mask)
-        out = state["params"]
+        new_loc, trained, old_full, bias = _round_core(w_loc, rng,
+                                                       scenario_t, mask)
+        out_full = _full_rows(new_loc)
         # Signal refresh behind an optimization barrier: the extra
         # reductions (per-client loss / update norms) must not give XLA
         # new fusion opportunities inside the shared round math — the
@@ -546,26 +673,29 @@ def build_sim(
         # to the open-loop path, and fusion-order changes break that at
         # ~1e-7 (cf. the bias_sq_norm_fused note, DESIGN.md §9).
         b_new, b_old, b_out = _fusion_barrier(
-            (stacked, old_params, out)
+            (trained, old_full, out_full)
         )
-        upd = selection.update_norms(b_new, b_old)
+        upd = selection.update_norms(_views_batch(b_new), _views_batch(b_old))
         new_signals = selection.SelectionSignals(
             loss=jnp.where(mask > 0, train_loss(b_out), signals.loss),
             upd_norm=jnp.where(mask > 0, upd, signals.upd_norm),
         )
-        return state, new_signals, mask, bias
+        return new_loc, new_signals, mask, bias
 
     def round_step(state: dict, rng: jax.Array, scenario: Scenario):
         """One pure D-FL round: local training + traced-protocol exchange.
 
         state: {"params": client-stacked pytree}; rng: this round's key.
-        ``scenario`` must be a per-round view (rank-2 ``link_eps``; slice a
-        dynamic scenario with `Scenario.at_round` first).  A non-None
-        ``participation`` mask makes sampled-out clients skip local
-        training, contribute nothing to aggregation, and keep their
-        parameters untouched.  Always evaluates its metrics — `run_scenario`
-        thins evaluation (``eval_every``) by scanning `_advance` between
-        measure points instead.
+        This is the legacy pytree-state API: the pytree is segmented at
+        entry and reassembled at exit (`run_scenario` never does this —
+        its scan is segment-native).  ``scenario`` must be a per-round view
+        (rank-2 ``link_eps``; slice a dynamic scenario with
+        `Scenario.at_round` first).  A non-None ``participation`` mask
+        makes sampled-out clients skip local training, contribute nothing
+        to aggregation, and keep their parameters untouched.  Always
+        evaluates its metrics — `run_scenario` thins evaluation
+        (``eval_every``) by advancing without metrics between measure
+        points instead.
         """
         if jnp.ndim(scenario.link_eps) == 3:
             raise ValueError(
@@ -579,147 +709,90 @@ def build_sim(
                 "sampling policy needs the signal carry that only "
                 "run_scenario's scan threads (DESIGN.md §10)"
             )
-        state, bias = _advance(state, rng, scenario)
+        if model_shards != 1:
+            raise ValueError(
+                "round_step exposes the unsharded pytree-state API; build "
+                "the sim with model_shards=1 (run_scenario / advance_chunk "
+                "are the model-sharded entry points, DESIGN.md §13)"
+            )
+        part = scenario.participation
+        if part is not None:
+            part = part[:n]
+        w_seg, spec, mp = protocols._to_segments(state["params"], seg_len)
+        new_seg, _t, _o, bias = _round_core(w_seg, rng, scenario, part)
         metrics = {
-            "acc": evaluate(state["params"]),
-            "loss": train_loss(state["params"]),
+            "acc": evaluate(new_seg),
+            "loss": train_loss(new_seg),
             "bias": bias,
         }
+        return {"params": protocols._from_segments(new_seg, spec, mp)}, metrics
+
+    # ------------------------------------------------------------------
+    # The scan: ONE chunked structure for every scenario class.
+    # state = {"w": (N, L_local, K) rows, "key": PRNGKey
+    #          [, "sig": SelectionSignals]}; a chunk is `eval_every`
+    # rounds ending in one metrics row.  `run_scenario` scans
+    # `advance_chunk` over chunk indices; `checkpoint.run_resumable`
+    # drives the SAME function from a host loop (bitwise resume).
+    # ------------------------------------------------------------------
+    n_chunks = n_rounds // eval_every
+
+    def _scan_init(scenario: Scenario, key: jax.Array) -> dict:
+        state = {"key": key, "w": _init_rows(key)}
+        if scenario.policy_id is not None:
+            state["sig"] = selection.init_signals(
+                train_loss(_full_rows(state["w"]))
+            )
+        return state
+
+    def _round(state: dict, t: jnp.ndarray, scenario: Scenario):
+        key, k_round = jax.random.split(state["key"])
+        sc_t = scenario.at_round(t)
+        if scenario.policy_id is not None:
+            w, sig, mask, bias = _advance_closed(
+                state["w"], k_round, sc_t, state["sig"]
+            )
+            return ({"key": key, "w": w, "sig": sig},
+                    {"bias": bias, "selected": mask})
+        w, bias = _advance(state["w"], k_round, sc_t)
+        return {"key": key, "w": w}, {"bias": bias}
+
+    def advance_chunk(state: dict, scenario: Scenario, c: jnp.ndarray):
+        """Advance chunk ``c`` (= rounds c*k .. (c+1)*k - 1, k=eval_every).
+
+        Returns (state, metrics-row): per-round ``bias`` (and ``selected``
+        for closed-loop scenarios) plus chunk-end ``acc`` / ``loss``.
+        ``eval_every == 1`` advances the single round inline — no inner
+        scan — so the per-round program is exactly the unchunked one.
+        """
+        scenario = scenario.prepare()
+        if eval_every == 1:
+            state, extras = _round(state, c, scenario)
+        else:
+            state, extras = jax.lax.scan(
+                lambda s, t: _round(s, t, scenario),
+                state, c * eval_every + jnp.arange(eval_every),
+            )
+        full = _full_rows(state["w"])
+        metrics = {"acc": evaluate(full), "loss": train_loss(full), **extras}
         return state, metrics
 
-    def _run_closed(scenario: Scenario, stacked, key: jax.Array) -> dict:
-        """Closed-loop scan: signals ride the carry (DESIGN.md §10).
-
-        The RNG split order matches the open-loop scans, and the uniform
-        policy's mask IS the base participation mask, so
-        ``policy="uniform"`` reproduces the open-loop trajectory bitwise.
-        Metrics grow a ``selected`` entry — the realized (rounds, N)
-        participation masks (the closed loop's decisions are data, not
-        just side effects).
-        """
-        signals0 = selection.init_signals(train_loss(stacked))
-
-        if eval_every == 1:
-            def body_cl(carry, t):
-                state, key, sig = carry
-                key, k_round = jax.random.split(key)
-                state, sig, mask, bias = _advance_closed(
-                    state, k_round, scenario.at_round(t), sig
-                )
-                metrics = {
-                    "acc": evaluate(state["params"]),
-                    "loss": train_loss(state["params"]),
-                    "bias": bias,
-                    "selected": mask,
-                }
-                return (state, key, sig), metrics
-
-            _, metrics = jax.lax.scan(
-                body_cl, ({"params": stacked}, key, signals0),
-                jnp.arange(n_rounds),
-            )
-            return metrics
-
-        def inner_cl(carry, t):
-            state, key, sig = carry
-            key, k_round = jax.random.split(key)
-            state, sig, mask, bias = _advance_closed(
-                state, k_round, scenario.at_round(t), sig
-            )
-            return (state, key, sig), (bias, mask)
-
-        def chunk_cl(carry, c):
-            carry, (biases, masks) = jax.lax.scan(
-                inner_cl, carry, c * eval_every + jnp.arange(eval_every)
-            )
-            state = carry[0]
-            return carry, {
-                "acc": evaluate(state["params"]),
-                "loss": train_loss(state["params"]),
-                "bias": biases,
-                "selected": masks,
-            }
-
-        _, metrics = jax.lax.scan(
-            chunk_cl, ({"params": stacked}, key, signals0),
-            jnp.arange(n_rounds // eval_every),
-        )
-        metrics["bias"] = metrics["bias"].reshape(-1)          # (n_rounds,)
-        metrics["selected"] = metrics["selected"].reshape(-1, n)
-        return metrics
+    def init_scan(scenario: Scenario) -> dict:
+        """The segment-native scan state at round 0 (pre-training)."""
+        scenario = scenario.prepare()
+        return _scan_init(scenario, jax.random.PRNGKey(scenario.seed))
 
     def run_scenario(scenario: Scenario) -> dict:
         scenario = scenario.prepare()
-        key = jax.random.PRNGKey(scenario.seed)
-        # Same init on every client (paper: common model structure + start).
-        params0 = init_fn(key)
-        stacked = jax.tree.map(
-            lambda leaf: jnp.broadcast_to(leaf[None], (n,) + leaf.shape), params0
-        )
-        if scenario.policy_id is not None:
-            return _run_closed(scenario, stacked, key)
-        dynamic = scenario.is_dynamic
-
-        if eval_every == 1:
-            if not dynamic:
-                # Static scenario: the EXACT pre-dynamic trace (bit-identity).
-                def body(carry, _):
-                    state, key = carry
-                    key, k_round = jax.random.split(key)
-                    state, metrics = round_step(state, k_round, scenario)
-                    return (state, key), metrics
-
-                _, metrics = jax.lax.scan(
-                    body, ({"params": stacked}, key), None, length=n_rounds
-                )
-                return metrics
-
-            # Dynamic scenario: scan over the round index, slicing
-            # time-leaved fields per round.  The RNG split order matches the
-            # static path, so a T=1 schedule (or an all-ones mask)
-            # reproduces it exactly.
-            def body_dyn(carry, t):
-                state, key = carry
-                key, k_round = jax.random.split(key)
-                state, metrics = round_step(state, k_round,
-                                            scenario.at_round(t))
-                return (state, key), metrics
-
-            _, metrics = jax.lax.scan(
-                body_dyn, ({"params": stacked}, key), jnp.arange(n_rounds)
-            )
-            return metrics
-
-        # Eval-thinned loop (eval_every = k > 1): an outer scan over
-        # n_rounds//k chunks, each advancing k exchange rounds (inner scan,
-        # same per-round RNG split order as the k=1 paths — the trained
-        # trajectory is identical) and evaluating ONCE at the chunk end.
-        # acc/loss carry a static (n_rounds//k, ...) axis; bias stays
-        # per-round ((n_rounds//k, k) stacked, flattened below).
-        def inner(carry, t):
-            state, key = carry
-            key, k_round = jax.random.split(key)
-            state, bias = _advance(
-                state, k_round, scenario.at_round(t) if dynamic else scenario
-            )
-            return (state, key), bias
-
-        def chunk(carry, c):
-            carry, biases = jax.lax.scan(
-                inner, carry, c * eval_every + jnp.arange(eval_every)
-            )
-            state, _ = carry
-            return carry, {
-                "acc": evaluate(state["params"]),
-                "loss": train_loss(state["params"]),
-                "bias": biases,
-            }
-
+        state = _scan_init(scenario, jax.random.PRNGKey(scenario.seed))
         _, metrics = jax.lax.scan(
-            chunk, ({"params": stacked}, key),
-            jnp.arange(n_rounds // eval_every),
+            lambda s, c: advance_chunk(s, scenario, c),
+            state, jnp.arange(n_chunks),
         )
-        metrics["bias"] = metrics["bias"].reshape(-1)     # (n_rounds,)
+        if eval_every > 1:
+            metrics["bias"] = metrics["bias"].reshape(-1)      # (n_rounds,)
+            if "selected" in metrics:
+                metrics["selected"] = metrics["selected"].reshape(-1, n)
         return metrics
 
     return SimPrograms(
@@ -727,6 +800,15 @@ def build_sim(
         run_scenario=run_scenario,
         n_clients=n,
         n_rounds=n_rounds,
+        init_scan=init_scan,
+        advance_chunk=advance_chunk,
+        n_chunks=n_chunks,
+        eval_every=eval_every,
+        model_shards=model_shards,
+        model_axis=model_axis,
+        n_segments=s_total,
+        local_segments=l_local,
+        seg_len=seg_len,
     )
 
 

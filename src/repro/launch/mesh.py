@@ -13,6 +13,10 @@ Two mesh families live here:
     `repro.fl.scenarios` to shard a batched scenario sweep so each device
     runs its slice of the grid with no cross-device collectives in the hot
     loop (DESIGN.md §7).
+  * `grid_model_mesh` — the 2-D ('grid', 'model') extension (DESIGN.md
+    §13): the model axis additionally shards each scenario's segment
+    dimension, so transformer-scale models split their (N, S, K) exchange
+    state across the devices of one model-sharding group.
 """
 from __future__ import annotations
 
@@ -39,6 +43,28 @@ def data_axes(*, multi_pod: bool = False):
 
 GRID_AXIS = "grid"
 
+# Axis name for model-axis (segment) sharding inside each scenario —
+# DESIGN.md §13.  Must match `repro.fl.simulator.MODEL_AXIS` (kept as an
+# independent literal so this module stays import-light; a mesh built here
+# and a sim built with the default `model_axis` always agree).
+MODEL_AXIS = "model"
+
+
+def _resolve_devices(
+    devices: Sequence[jax.Device] | int | None, *, what: str
+) -> list[jax.Device]:
+    """Normalize a device spec (None = all, int = first k, or a sequence)."""
+    if devices is None:
+        return list(jax.devices())
+    if isinstance(devices, int):
+        avail = jax.devices()
+        if not 1 <= devices <= len(avail):
+            raise ValueError(
+                f"{what}: asked for {devices} devices, have {len(avail)}"
+            )
+        return avail[:devices]
+    return list(devices)
+
 
 def grid_mesh(devices: Sequence[jax.Device] | int | None = None) -> jax.sharding.Mesh:
     """1-D ``(GRID_AXIS,)`` mesh for sharding a scenario batch over devices.
@@ -52,16 +78,46 @@ def grid_mesh(devices: Sequence[jax.Device] | int | None = None) -> jax.sharding
       independent, so the grid axis needs no collectives; any device subset
       (including a single device) is a valid mesh.
     """
-    if devices is None:
-        devices = jax.devices()
-    elif isinstance(devices, int):
-        avail = jax.devices()
-        if not 1 <= devices <= len(avail):
-            raise ValueError(
-                f"grid_mesh: asked for {devices} devices, have {len(avail)}"
-            )
-        devices = avail[:devices]
-    return jax.sharding.Mesh(np.asarray(list(devices)), (GRID_AXIS,))
+    devices = _resolve_devices(devices, what="grid_mesh")
+    return jax.sharding.Mesh(np.asarray(devices), (GRID_AXIS,))
+
+
+def grid_model_mesh(
+    devices: Sequence[jax.Device] | int | None = None,
+    *,
+    model_shards: int = 1,
+) -> jax.sharding.Mesh:
+    """2-D ``(GRID_AXIS, MODEL_AXIS)`` mesh: scenario-parallel × model-shard.
+
+    The mesh of DESIGN.md §13: the grid axis shards a scenario batch
+    (independent rows, no collectives) while the model axis shards each
+    scenario's SEGMENT dimension — every group of ``model_shards``
+    consecutive devices forms one model-sharding group whose collectives
+    (`all_gather` of the full segment rows before local training) stay
+    inside the group.
+
+    Args:
+      devices: a device sequence, an int (first k of `jax.devices()`), or
+        None for all devices.  The count must be a multiple of
+        ``model_shards``.
+      model_shards: Dm, the model-axis size.  ``model_shards=1`` is a
+        degenerate (g, 1) mesh — per-device programs identical to
+        `grid_mesh`'s.
+
+    Returns:
+      A mesh of shape ``(len(devices) // model_shards, model_shards)``
+      with axes ``('grid', 'model')``.
+    """
+    devs = _resolve_devices(devices, what="grid_model_mesh")
+    if model_shards < 1:
+        raise ValueError(f"model_shards={model_shards} must be >= 1")
+    if len(devs) % model_shards:
+        raise ValueError(
+            f"grid_model_mesh: {len(devs)} devices do not factor into "
+            f"model_shards={model_shards} groups"
+        )
+    arr = np.asarray(devs).reshape(len(devs) // model_shards, model_shards)
+    return jax.sharding.Mesh(arr, (GRID_AXIS, MODEL_AXIS))
 
 
 def mesh_fingerprint(mesh: jax.sharding.Mesh) -> tuple:

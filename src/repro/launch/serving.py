@@ -356,10 +356,14 @@ class ScenarioServer:
         ``self.tracker`` (pass `NullTracker()` to disable).
       devices: the serving mesh — anything `launch.mesh.grid_mesh`
         accepts (a device sequence, an int, or None for single-device
-        vmap).  Every coalesced dispatch is sharded over the resulting
-        ``('grid',)`` mesh via the `GridRunner` shard_map path, with
-        compiled programs cached per mesh fingerprint; results are
-        bit-identical to unsharded serving (DESIGN.md §12).
+        vmap), or a ``(spec, model_shards)`` tuple for a 2-D
+        ``('grid', 'model')`` mesh (`launch.mesh.grid_model_mesh`,
+        DESIGN.md §13: each scenario's segment axis is split across the
+        model-sharding group — transformer-scale serving).  Every
+        coalesced dispatch is sharded over the resulting mesh via the
+        `GridRunner` shard_map path, with compiled programs cached per
+        mesh fingerprint; results are bit-identical to unsharded serving
+        (DESIGN.md §12).
 
     Lifecycle: `start()` spawns the batcher + dispatcher + deadline-reaper
     threads; `stop(drain=True)` serves everything already accepted and

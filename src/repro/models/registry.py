@@ -2,6 +2,21 @@
 
 The train/serve step functions here are MESH-AGNOSTIC pure functions;
 `repro.launch` binds them to meshes with in/out shardings.
+
+Two registries live here:
+
+  * `build` / `ModelBundle` — the centralized-training bundle (optimizer,
+    serve/prefill steps, KV cache) used by `repro.launch.train`.
+  * `sim_model` / `SIM_MODEL_IDS` — the SIMULATOR-facing zoo (DESIGN.md
+    §13): name -> ``(init_fn, apply_fn)`` pairs with `build_sim` /
+    `GridRunner`'s contract (``init(key) -> params``,
+    ``apply(params, x) -> logits``), one entry per smallnet and per
+    decoder-only `configs/` architecture (constructed via
+    `configs.base.smoke_variant`, so the registry can never drift from
+    the config files), plus the tiny `transformer_nwp` next-word-
+    prediction model that pairs with `data.synthetic.fed_char_stream`.
+    Every entry carries a stable integer `model_id` — traced-compatible
+    (embed it in traced structures as a static int32 scalar).
 """
 from __future__ import annotations
 
@@ -138,3 +153,125 @@ def build(cfg: T.ModelCfg, *, optimizer: str = "adamw",
 def init_state(bundle: ModelBundle, key: jax.Array) -> Pytree:
     params = bundle.init(key)
     return {"params": params, "opt": bundle.optimizer.init(params)}
+
+
+# ---------------------------------------------------------------------------
+# Simulator-facing model zoo (DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+class SimModel(NamedTuple):
+    """A model the FL simulator can carry: `build_sim(init_fn, apply_fn, ...)`.
+
+    ``model_id`` is a stable small integer (append-only in
+    `SIM_MODEL_IDS`), safe to bake into traced structures as a static
+    int32 scalar; ``cfg`` is the backing `ModelCfg` for transformer
+    entries, None for smallnets.
+    """
+
+    name: str
+    model_id: int
+    init_fn: Callable[[jax.Array], Pytree]
+    apply_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray]
+    cfg: T.ModelCfg | None
+
+
+def _nwp_archs() -> tuple[str, ...]:
+    """The decoder-only `configs/` architectures (modal families — vlm,
+    enc_dec — need side inputs the sim's ``apply(params, x)`` contract
+    cannot carry)."""
+    from repro.configs import base as configs
+
+    return tuple(
+        a for a in configs.ARCH_IDS if not needs_modal(configs.get(a))
+    )
+
+
+def _sim_model_ids() -> dict[str, int]:
+    from repro.models import smallnets
+
+    ids = {name: i for i, name in enumerate(smallnets.MODELS)}
+    ids["transformer_nwp"] = len(ids)
+    # Arch entries get a disjoint, append-only id block.
+    for i, arch in enumerate(_nwp_archs()):
+        ids[f"nwp:{arch}"] = 10 + i
+    return ids
+
+
+SIM_MODEL_IDS = _sim_model_ids()
+
+
+def nwp_cfg(arch: str = "qwen2_5_3b", *, vocab: int = 90,
+            tiny: bool = True) -> T.ModelCfg:
+    """A next-word-prediction `ModelCfg` derived from a `configs/` entry.
+
+    Starts from `configs.base.smoke_variant(get(arch))` — the registry
+    entry is constructible from the config file by definition — swaps the
+    vocabulary for the char-stream corpus size, and (``tiny=True``)
+    shrinks to FL-simulator scale (d_model 32, 2 MHA heads, d_ff 64) so a
+    client model is a few thousand segments, not a few hundred thousand.
+    ``tiny=False`` keeps the smoke geometry (the registry self-test
+    size for non-dense families, whose width constraints the tiny
+    override does not try to satisfy).
+    """
+    from repro.configs import base as configs
+
+    cfg = configs.smoke_variant(configs.get(arch))
+    if needs_modal(cfg):
+        raise ValueError(
+            f"{arch} ({cfg.family}) needs side inputs (modal embeds); "
+            f"next-word-prediction sim models must be decoder-only"
+        )
+    kw: dict = dict(name=f"nwp-{cfg.name}", vocab=vocab)
+    if tiny:
+        kw.update(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                  d_ff=64)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _nwp_apply(cfg: T.ModelCfg):
+    def apply_fn(params, tokens):
+        logits, _aux = T.forward(params, cfg, tokens)
+        return logits
+
+    return apply_fn
+
+
+def sim_models() -> list[str]:
+    """Every registered simulator model name (see `sim_model`)."""
+    return sorted(SIM_MODEL_IDS, key=SIM_MODEL_IDS.get)
+
+
+def sim_model(name: str, *, vocab: int = 90) -> SimModel:
+    """Construct a registered simulator model by name.
+
+    Names: the `smallnets.MODELS` entries (``mlp`` / ``cnn`` / ``resnet``
+    / ``charrnn``), ``transformer_nwp`` (tiny decoder LM for
+    `fed_char_stream` next-word prediction), or ``nwp:<arch>`` for any
+    decoder-only `configs/` architecture at smoke size.
+
+    Args:
+      name: registry key from `SIM_MODEL_IDS`.
+      vocab: token vocabulary for the NWP entries (must match the
+        char-stream dataset); ignored for smallnets.
+
+    Returns:
+      A `SimModel`; feed ``init_fn`` / ``apply_fn`` straight into
+      `repro.fl.simulator.build_sim` or `repro.fl.scenarios.GridRunner`.
+    """
+    from repro.models import smallnets
+
+    if name not in SIM_MODEL_IDS:
+        raise ValueError(
+            f"unknown sim model {name!r}: choose from {sim_models()}"
+        )
+    mid = SIM_MODEL_IDS[name]
+    if name in smallnets.MODELS:
+        init_fn, apply_fn = smallnets.MODELS[name]
+        return SimModel(name, mid, init_fn, apply_fn, None)
+    if name == "transformer_nwp":
+        cfg = nwp_cfg(vocab=vocab)
+    else:                                   # "nwp:<arch>"
+        cfg = nwp_cfg(name.split(":", 1)[1], vocab=vocab, tiny=False)
+    return SimModel(
+        name, mid, lambda key: T.init_params(key, cfg), _nwp_apply(cfg), cfg
+    )

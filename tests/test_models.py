@@ -231,3 +231,35 @@ def test_flash_attention_matches_naive():
         b, _ = T.forward(params, cfg_f, tokens, window=w)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4,
                                    rtol=1e-4)
+
+
+def test_sim_registry_all_models():
+    """Registry self-test: every registered sim model (smallnets + NWP
+    transformers for every decoder-only configs/ arch) instantiates and
+    runs one forward pass at tiny size, with a stable unique model_id."""
+    key = jax.random.PRNGKey(0)
+    inputs = {
+        "cnn": np.zeros((2, 28, 28, 1), np.float32),
+        "resnet": np.zeros((2, 8, 8, 3), np.float32),
+        "mlp": np.zeros((2, 32), np.float32),
+    }
+    seen_ids = set()
+    names = registry.sim_models()
+    assert "transformer_nwp" in names
+    assert any(n.startswith("nwp:") for n in names)
+    for name in names:
+        m = registry.sim_model(name, vocab=90)
+        assert m.model_id not in seen_ids
+        seen_ids.add(m.model_id)
+        assert m.model_id == registry.SIM_MODEL_IDS[name]
+        x = jnp.asarray(inputs.get(name, np.zeros((2, 8), np.int32)))
+        out = m.apply_fn(m.init_fn(key), x)
+        if name in inputs:
+            assert out.shape == (2, 10)
+        else:
+            assert out.shape == (2, 8, 90)      # (B, S, vocab) logits
+        assert np.isfinite(np.asarray(out, np.float32)).all()
+    with pytest.raises(ValueError, match="unknown sim model"):
+        registry.sim_model("not-a-model")
+    with pytest.raises(ValueError, match="decoder-only"):
+        registry.nwp_cfg("whisper_base")

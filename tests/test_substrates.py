@@ -108,3 +108,28 @@ def test_smallnets_forward_shapes():
     toks = jax.random.randint(key, (2, 12), 0, 90)
     rnn = smallnets.init_charrnn(key, hidden=32)
     assert smallnets.apply_charrnn(rnn, toks).shape == (2, 12, 90)
+
+
+def test_checkpoint_dtype_mismatch_raises_unless_cast():
+    tree = {"a": jnp.arange(4, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, tree)
+        want = {"a": jnp.zeros(4, jnp.bfloat16)}
+        with pytest.raises(ValueError, match="dtype mismatch"):
+            checkpoint.restore(d, want)
+        back = checkpoint.restore(d, want, cast=True)
+        assert back["a"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(back["a"], np.float32), np.arange(4, dtype=np.float32)
+        )
+
+
+def test_checkpoint_latest_step_disambiguates():
+    """No checkpoint at all raises; a stepless checkpoint returns None."""
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            checkpoint.latest_step(d)
+        checkpoint.save(d, {"a": jnp.zeros(2)})
+        assert checkpoint.latest_step(d) is None
+        checkpoint.save(d, {"a": jnp.zeros(2)}, step=7)
+        assert checkpoint.latest_step(d) == 7
