@@ -25,6 +25,8 @@ from __future__ import annotations
 import inspect
 import json
 import os
+import tempfile
+import uuid
 from typing import Any
 
 import jax
@@ -47,6 +49,14 @@ _SHARD_MAP_NO_CHECK = {
 Pytree = Any
 
 
+class CorruptCheckpoint(RuntimeError):
+    """The checkpoint at a path is internally inconsistent — a torn
+    write (manifest and arrays from different `save` calls), a missing
+    payload file, or an array count that disagrees with the manifest.
+    `run_resumable` treats such a checkpoint as absent and restarts from
+    round 0 rather than resuming from torn state."""
+
+
 def _paths(tree: Pytree) -> list[tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
@@ -60,14 +70,22 @@ def save(path: str, tree: Pytree, *, step: int | None = None) -> None:
     `jax.Array` sharded over a mesh (e.g. the model-axis-sharded ``"w"``
     rows of a ``model_shards > 1`` sim) is materialized as its full
     global value before hitting disk.
+
+    Crash-safe: both files are staged in a temp dir on the same
+    filesystem, then atomically `os.replace`d into place — arrays first,
+    manifest last, so the manifest is the commit point (a crash leaves
+    either the previous checkpoint or the new one, never a half-written
+    file).  A per-save ``save_id`` is stamped into BOTH files; `restore`
+    rejects the one torn window the ordering leaves open (new arrays
+    with the old manifest) as `CorruptCheckpoint`.
     """
     os.makedirs(path, exist_ok=True)
     leaves = _paths(tree)
+    save_id = uuid.uuid4().hex
     arrays = {
         f"leaf_{i}": np.asarray(jax.device_get(l))
         for i, (_, l) in enumerate(leaves)
     }
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
     treedef = jax.tree_util.tree_structure(tree)
     manifest = {
         "keys": [k for k, _ in leaves],
@@ -75,9 +93,27 @@ def save(path: str, tree: Pytree, *, step: int | None = None) -> None:
         "step": step,
         "dtypes": [str(a.dtype) for a in arrays.values()],
         "shapes": [list(a.shape) for a in arrays.values()],
+        "save_id": save_id,
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    tmp = tempfile.mkdtemp(prefix=".ckpt-tmp-", dir=path)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), __save_id__=save_id,
+                 **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(os.path.join(tmp, "arrays.npz"),
+                   os.path.join(path, "arrays.npz"))
+        os.replace(os.path.join(tmp, "manifest.json"),
+                   os.path.join(path, "manifest.json"))
+    finally:
+        for name in ("arrays.npz", "manifest.json"):
+            try:
+                os.unlink(os.path.join(tmp, name))
+            except FileNotFoundError:
+                pass
+        os.rmdir(tmp)
 
 
 def restore(path: str, like: Pytree, *, cast: bool = False) -> Pytree:
@@ -97,10 +133,14 @@ def restore(path: str, like: Pytree, *, cast: bool = False) -> Pytree:
 
     Returns:
       ``like``'s structure filled with the stored values.
+
+    Raises:
+      FileNotFoundError: no manifest at ``path`` (no checkpoint).
+      CorruptCheckpoint: the manifest exists but the payload is missing,
+        from a different `save` call (torn write), or holds the wrong
+        number of arrays.
     """
-    data = np.load(os.path.join(path, "arrays.npz"))
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest, data = _load_consistent(path)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     stored = [data[f"leaf_{i}"] for i in range(len(manifest["keys"]))]
     if len(stored) != len(leaves_like):
@@ -131,17 +171,57 @@ def restore(path: str, like: Pytree, *, cast: bool = False) -> Pytree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _load_consistent(path: str) -> tuple[dict, Any]:
+    """Load ``(manifest, npz)`` from ``path``, proving they belong to
+    the SAME `save` call.
+
+    FileNotFoundError when there is no manifest (no checkpoint at all);
+    `CorruptCheckpoint` when the manifest exists but the payload is
+    missing, carries a different ``save_id`` (torn write), or its leaf
+    keys disagree with the manifest's count.  Checkpoints written before
+    ``save_id`` existed (no id in either file) pass the pairing check.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    try:
+        data = np.load(os.path.join(path, "arrays.npz"))
+    except FileNotFoundError:
+        raise CorruptCheckpoint(
+            f"checkpoint at {path!r} has a manifest but no arrays.npz "
+            f"(torn write — treat as absent)"
+        ) from None
+    man_id = manifest.get("save_id")
+    npz_id = (str(data["__save_id__"]) if "__save_id__" in data.files
+              else None)
+    if man_id != npz_id:
+        raise CorruptCheckpoint(
+            f"checkpoint at {path!r} is torn: manifest save_id "
+            f"{man_id!r} != arrays save_id {npz_id!r}"
+        )
+    want = {f"leaf_{i}" for i in range(len(manifest["keys"]))}
+    got = {k for k in data.files if k.startswith("leaf_")}
+    if want != got:
+        raise CorruptCheckpoint(
+            f"checkpoint at {path!r}: manifest lists "
+            f"{len(manifest['keys'])} arrays, payload holds {len(got)}"
+        )
+    return manifest, data
+
+
 def latest_step(path: str) -> int | None:
     """The ``step`` recorded by the checkpoint at ``path``.
 
-    Distinguishes the two previously-conflated cases:
+    Distinguishes the previously-conflated cases:
 
       * no checkpoint at ``path`` at all → raises FileNotFoundError;
+      * an incomplete/torn checkpoint → raises `CorruptCheckpoint`
+        (callers that can restart should treat it like absent —
+        `run_resumable` does);
       * a checkpoint exists but `save` was called without ``step`` →
         returns None.
     """
-    with open(os.path.join(path, "manifest.json")) as f:
-        return json.load(f).get("step")
+    manifest, _ = _load_consistent(path)
+    return manifest.get("step")
 
 
 # ----------------------------------------------------------------------
@@ -253,7 +333,10 @@ def run_resumable(
     if resume:
         try:
             step = latest_step(ckpt_dir)
-        except FileNotFoundError:
+        except (FileNotFoundError, CorruptCheckpoint):
+            # Absent or torn: restart from round 0 (the first save
+            # overwrites whatever is there) rather than resume from
+            # half-written state.
             step = None
         if step is not None:
             like = {

@@ -70,6 +70,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import queue
 import threading
 import time
@@ -107,6 +108,24 @@ class ServerStopped(RuntimeError):
     (``stop(drain=False)``)."""
 
 
+class InvalidRequest(ValueError):
+    """A `submit` argument is malformed (non-positive or non-finite
+    ``deadline_s``, NaN / non-integer ``priority``).
+
+    Raised synchronously at submit time, so malformed scheduling inputs
+    fail with a named error instead of producing undefined scheduler
+    behavior (a NaN priority poisons every queue-ordering comparison; a
+    zero deadline is expired before it is ever registered)."""
+
+
+class UnknownTenant(InvalidRequest):
+    """The submitted ``tenant`` is not declared in
+    ``ServeConfig.tenant_weights`` while the server runs with an explicit
+    tenant roster.  Only raised when ``tenant_weights`` is set — a server
+    without declared weights accepts any tenant name at weight 1.0.  The
+    default tenant is always accepted."""
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Serving-engine knobs (DESIGN.md §11–§12).
@@ -124,7 +143,10 @@ class ServeConfig:
     runner's compiled-program LRU; ``strict_packet_check`` makes the
     PER-packet vs codec-segment mismatch an admission ERROR instead of a
     one-time warning; ``tenant_weights`` maps tenant name -> weighted-fair
-    share (unlisted tenants weigh 1.0).
+    share.  Declaring weights makes the roster authoritative: a submit
+    under a tenant name that is neither listed nor the default raises
+    `UnknownTenant` instead of silently scheduling at an undeclared
+    weight.  Without declared weights every tenant weighs 1.0.
     """
 
     max_batch: int = 8
@@ -150,10 +172,15 @@ class ServeConfig:
                 "would never fit a warm shape"
             )
         if self.tenant_weights is not None and any(
-            w <= 0 for w in self.tenant_weights.values()
+            not (w > 0) or not math.isfinite(w)
+            for w in self.tenant_weights.values()
         ):
+            # NB: `not (w > 0)` (rather than `w <= 0`) also catches NaN —
+            # a NaN weight would make every stride-scheduler comparison
+            # undefined.
             raise ValueError(
-                f"tenant_weights must be positive, got {self.tenant_weights}"
+                f"tenant_weights must be positive and finite, got "
+                f"{self.tenant_weights}"
             )
 
 
@@ -513,6 +540,18 @@ class ScenarioServer:
 
     # -- client API ---------------------------------------------------
 
+    def healthy(self) -> bool:
+        """Liveness probe for a fronting router (DESIGN.md §14): True iff
+        the server is accepting traffic and its worker threads (batcher,
+        dispatcher, reaper) are alive.  Pure host-side checks — safe to
+        call from a heartbeat loop at high frequency."""
+        return bool(
+            self._started and not self._stopped
+            and self._batcher is not None and self._batcher.is_alive()
+            and self._dispatcher is not None and self._dispatcher.is_alive()
+            and self._reaper is not None and self._reaper.is_alive()
+        )
+
     def warmup(self, *grids: scenarios.ScenarioGrid) -> int:
         """AOT-compile the programs the declared grids would dispatch
         (per-(protocol, mode) groups at their padded bucket sizes, on the
@@ -558,17 +597,48 @@ class ScenarioServer:
         Admission validation happens HERE, synchronously: a malformed
         request raises `scenarios.AdmissionError` (naming its offending
         scenarios) without ever touching the serving threads — one bad
-        request cannot kill a warm server.  A stopped (or never-started)
-        server raises `ServerStopped`; the stopped-check is atomic with
-        the enqueue, so an accepted future ALWAYS terminates.
+        request cannot kill a warm server.  Malformed scheduling inputs
+        (non-positive/non-finite deadline, NaN priority, a tenant outside
+        a declared roster) raise `InvalidRequest` / `UnknownTenant`
+        instead of producing undefined scheduler behavior.  A stopped (or
+        never-started) server raises `ServerStopped`; the stopped-check
+        is atomic with the enqueue, so an accepted future ALWAYS
+        terminates.
         """
         if len(grid) == 0:
             raise scenarios.AdmissionError("grid rejected: empty request")
         self.runner.validate(
             grid, strict_packet=self.cfg.strict_packet_check
         )
-        if deadline_s is not None and deadline_s < 0:
-            raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
+        if deadline_s is not None and (
+            not math.isfinite(deadline_s) or not deadline_s > 0
+        ):
+            raise InvalidRequest(
+                f"deadline_s must be a positive finite number of seconds, "
+                f"got {deadline_s!r} (a non-positive deadline is expired "
+                f"before it can be registered)"
+            )
+        try:
+            prio = float(priority)
+        except (TypeError, ValueError):
+            raise InvalidRequest(
+                f"priority must be an integer, got {priority!r}"
+            ) from None
+        if not math.isfinite(prio) or prio != int(prio):
+            raise InvalidRequest(
+                f"priority must be a finite integer, got {priority!r} "
+                f"(a NaN priority poisons every queue-ordering comparison)"
+            )
+        priority = int(prio)
+        if (self.cfg.tenant_weights is not None
+                and tenant != DEFAULT_TENANT
+                and tenant not in self.cfg.tenant_weights):
+            raise UnknownTenant(
+                f"tenant {tenant!r} is not declared in "
+                f"ServeConfig.tenant_weights "
+                f"{sorted(self.cfg.tenant_weights)} — declare its "
+                f"fair-share weight or submit under the default tenant"
+            )
         now = time.monotonic()
         req = _Request(
             grid=grid, future=Future(), t_submit=now, priority=priority,
@@ -806,8 +876,7 @@ class ScenarioServer:
                 )
             except Exception as e:   # keep serving: fail THIS batch only
                 self.tracker.count("serve/dispatch_errors")
-                for r in reqs:
-                    _try_resolve(r.future, exc=e)
+                self._retry_individually(reqs, e)
                 continue
             now = time.monotonic()
             self.tracker.observe("serve/dispatch_s", now - t0)
@@ -825,6 +894,50 @@ class ScenarioServer:
                     # Lost the race to a cancel / deadline / hard stop
                     # that fired mid-dispatch: result discarded.
                     self.tracker.count("serve/results_discarded")
+
+    def _retry_individually(self, reqs: list[_Request],
+                            exc: BaseException) -> None:
+        """A coalesced dispatch raised: shrink the blast radius.
+
+        One poisoned request must not fail innocent neighbors that only
+        shared its batch, so each surviving request is re-dispatched
+        ALONE, with one bounded retry (``serve/dispatch_retries``): the
+        poisoned one fails with its own error, the rest get their
+        results.  A single-request dispatch has no neighbors to protect —
+        it just fails with the error (no retry: re-running the same
+        poison alone would double device time for the same outcome).
+        """
+        if len(reqs) == 1:
+            _try_resolve(reqs[0].future, exc=exc)
+            return
+        for r in reqs:
+            if r.future.done():         # cancelled/expired mid-failure
+                _ack_cancel(r.future)
+                continue
+            if self._abort:
+                _try_resolve(r.future, exc=ServerStopped("server stopped"))
+                continue
+            self.tracker.count("serve/dispatch_retries")
+            t0 = time.monotonic()
+            try:
+                res = self.runner.run(
+                    r.grid, pad_to=self.cfg.batch_buckets, validate=False,
+                )
+            except Exception as e2:
+                _try_resolve(r.future, exc=e2)
+                continue
+            now = time.monotonic()
+            self.tracker.observe("serve/dispatch_s", now - t0)
+            if _try_resolve(
+                r.future,
+                result=_slice_result(res, 0, len(r.grid), r.grid.labels),
+            ):
+                self.tracker.observe("serve/latency_s", now - r.t_submit)
+                self.tracker.scoped(f"tenant/{r.tenant}").observe(
+                    "latency_s", now - r.t_submit
+                )
+            else:
+                self.tracker.count("serve/results_discarded")
 
 
 # ---------------------------------------------------------------------

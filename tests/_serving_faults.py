@@ -23,8 +23,12 @@ on the runner, which is not synchronized with the dispatcher thread.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from concurrent.futures import Future
 from typing import Mapping
+
+from repro.launch import serving
 
 
 @dataclasses.dataclass
@@ -72,3 +76,143 @@ def install(server, *, raise_on: Mapping[int, Exception] | None = None,
 
     runner.run = run_with_faults
     return probe
+
+
+# ----------------------------------------------------------------------
+# Router chaos: faults at the Replica transport boundary.
+# ----------------------------------------------------------------------
+
+class ChaosReplica:
+    """A `router.Replica` wrapper that injects transport-level faults.
+
+    Where `install` poisons dispatches INSIDE one server, this breaks
+    the link BETWEEN the router and a replica — the failure modes a
+    multi-replica deployment must route around (DESIGN.md §14).  Modes
+    are switchable mid-run (that is the point):
+
+      * ``kill()`` — submits raise `ServerStopped`, pings fail.  The
+        inner server keeps running: requests already inside it still
+        resolve (the router must win/lose the exactly-once race, not
+        deadlock).
+      * ``stall()`` — submits are swallowed: the caller gets a Future
+        that never resolves (pings still succeed — the sneaky failure
+        where health checks pass while work hangs; only the router's
+        attempt timeout catches it).
+      * ``slow(seconds)`` — submits pass through but results are
+        delivered ``seconds`` late (late enough → timeout + retry, and
+        the eventual result must lose the resolution race, not deliver
+        twice).
+      * ``flap(period_s)`` — alternates alive/dead every ``period_s``
+        (alive first), driven by the wall clock.
+      * ``revive()`` — back to normal; still-pending stalled futures are
+        cancelled.
+
+    Wrap BEFORE handing the replica to `ScenarioRouter` (the router
+    snapshots its replica dict at construction).
+    """
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = inner.name
+        self._lock = threading.Lock()
+        self._mode = "ok"
+        self._slow_s = 0.0
+        self._flap_period = 0.0
+        self._flap_t0 = 0.0
+        self._stalled: list[Future] = []
+        self.submits = 0
+        self.rejected = 0
+
+    # -- fault plan ----------------------------------------------------
+
+    def kill(self) -> None:
+        with self._lock:
+            self._mode = "killed"
+
+    def stall(self) -> None:
+        with self._lock:
+            self._mode = "stalled"
+
+    def slow(self, seconds: float) -> None:
+        with self._lock:
+            self._mode = "slow"
+            self._slow_s = float(seconds)
+
+    def flap(self, period_s: float) -> None:
+        with self._lock:
+            self._mode = "flapping"
+            self._flap_period = float(period_s)
+            self._flap_t0 = time.monotonic()
+
+    def revive(self) -> None:
+        with self._lock:
+            self._mode = "ok"
+            stalled, self._stalled = self._stalled, []
+        for f in stalled:
+            f.cancel()
+
+    def _dead_now(self) -> bool:
+        with self._lock:
+            if self._mode == "killed":
+                return True
+            if self._mode == "flapping":
+                phase = (time.monotonic() - self._flap_t0)
+                return int(phase / self._flap_period) % 2 == 1
+            return False
+
+    # -- Replica protocol ----------------------------------------------
+
+    def submit(self, grid, *, priority=0, deadline_s=None,
+               tenant=serving.DEFAULT_TENANT) -> Future:
+        self.submits += 1
+        if self._dead_now():
+            self.rejected += 1
+            raise serving.ServerStopped(f"{self.name}: chaos-killed")
+        with self._lock:
+            mode, slow_s = self._mode, self._slow_s
+        if mode == "stalled":
+            f = Future()                 # never resolves; router's
+            with self._lock:             # attempt timeout must save us
+                self._stalled.append(f)
+            return f
+        inner_f = self.inner.submit(grid, priority=priority,
+                                    deadline_s=deadline_s, tenant=tenant)
+        if mode != "slow" or slow_s <= 0:
+            return inner_f
+        proxy = Future()
+
+        def _deliver(f: Future) -> None:
+            def copy():
+                if f.cancelled():
+                    proxy.cancel()
+                    return
+                if not proxy.set_running_or_notify_cancel():
+                    return               # router cancelled the proxy
+                exc = f.exception()
+                if exc is not None:
+                    proxy.set_exception(exc)
+                else:
+                    proxy.set_result(f.result())
+            t = threading.Timer(slow_s, copy)
+            t.daemon = True
+            t.start()
+
+        inner_f.add_done_callback(_deliver)
+        return proxy
+
+    def ping(self) -> bool:
+        if self._dead_now():
+            return False
+        # Stalled/slow replicas ping fine — the dispute is settled by
+        # attempt timeouts, not the heartbeat.
+        return self.inner.ping()
+
+    def warmup(self, *grids) -> int:
+        return self.inner.warmup(*grids)
+
+    def start(self) -> None:
+        self.inner.start()
+
+    def stop(self, *, drain: bool = True) -> None:
+        self.revive()
+        self.inner.stop(drain=drain)

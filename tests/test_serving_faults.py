@@ -67,9 +67,11 @@ def _assert_same(got, want):
                           equal_nan=True)
 
 
-def test_poisoned_dispatch_fails_only_its_batch(toy):
-    """Dispatch 0 raises: both coalesced requests see the exception; the
-    next submit is served normally from the same warm server."""
+def test_poisoned_dispatch_fails_only_the_poisoned_request(toy):
+    """Coalesced dispatch 0 raises: each member is retried INDIVIDUALLY
+    (blast-radius shrink, DESIGN.md §12) — the request whose solo retry
+    also raises fails, its innocent neighbor is served, bit-identical to
+    a direct run; the next submit is served normally."""
     data, nets, init, apply_fn = toy
     cfg = _cfg()
     boom = RuntimeError("injected dispatch failure")
@@ -77,22 +79,79 @@ def test_poisoned_dispatch_fails_only_its_batch(toy):
         init, apply_fn, data, cfg,
         serve=serving.ServeConfig(max_batch=8, max_delay_s=0.25),
     )
-    probe = install(server, raise_on={0: boom})
-    ref = scenarios.run_grid(init, apply_fn, data, _grid(nets[0], label="c"),
-                             cfg)
+    # Call 0 is the coalesced [a, b] batch; call 1 is a's solo retry
+    # (poisoned again -> a truly fails); call 2 is b's solo retry
+    # (clean -> b is served); call 3 is c.
+    probe = install(server, raise_on={0: boom, 1: boom})
+    ref_b = scenarios.run_grid(init, apply_fn, data,
+                               _grid(nets[1], label="b"), cfg)
+    ref_c = scenarios.run_grid(init, apply_fn, data,
+                               _grid(nets[0], label="c"), cfg)
     with server:
         fa = server.submit(_grid(nets[0], "ra", "a"))
         fb = server.submit(_grid(nets[1], "ra", "b"))
         with pytest.raises(RuntimeError, match="injected"):
             fa.result(timeout=120)
-        with pytest.raises(RuntimeError, match="injected"):
-            fb.result(timeout=120)
+        _assert_same(fb.result(timeout=300), ref_b)
         fc = server.submit(_grid(nets[0], "ra", "c"))
-        _assert_same(fc.result(timeout=300), ref)
-    assert probe.calls == 2            # the poisoned batch + the survivor
+        _assert_same(fc.result(timeout=300), ref_c)
+    assert probe.calls == 4
+    assert probe.rows == [2, 1, 1, 1]
     snap = server.tracker.snapshot()
     assert snap["serve/dispatch_errors"] == 1
+    assert snap["serve/dispatch_retries"] == 2
     assert snap["serve/requests"] == 3
+
+
+def test_single_request_dispatch_failure_is_not_retried(toy):
+    """A poisoned dispatch with ONE member has no innocent neighbors:
+    the failure propagates without a retry dispatch."""
+    data, nets, init, apply_fn = toy
+    cfg = _cfg()
+    server = serving.ScenarioServer(
+        init, apply_fn, data, cfg,
+        serve=serving.ServeConfig(max_batch=1, max_delay_s=0.01),
+    )
+    probe = install(server, raise_on={0: RuntimeError("injected solo")})
+    with server:
+        fa = server.submit(_grid(nets[0], "ra", "a"))
+        with pytest.raises(RuntimeError, match="injected solo"):
+            fa.result(timeout=120)
+    assert probe.calls == 1
+    snap = server.tracker.snapshot()
+    assert snap["serve/dispatch_errors"] == 1
+    assert snap.get("serve/dispatch_retries", 0) == 0
+
+
+def test_deadline_race_between_dispatch_and_delivery_is_discarded(toy):
+    """A request whose deadline expires AFTER the dispatcher's liveness
+    re-slice but BEFORE its dispatch returns is failed by the reaper with
+    `DeadlineExceeded`; the computed result is discarded
+    (`serve/results_discarded`), never delivered twice."""
+    data, nets, init, apply_fn = toy
+    cfg = _cfg()
+    server = serving.ScenarioServer(
+        init, apply_fn, data, cfg,
+        serve=serving.ServeConfig(max_batch=4, max_delay_s=0.01),
+    )
+    server.warmup(_grid(nets[0], label="a"))
+    probe = install(server, stall_on={0: 1.0})
+    with server:
+        t0 = time.monotonic()
+        fa = server.submit(_grid(nets[0], "ra", "a"), deadline_s=0.3)
+        with pytest.raises(serving.DeadlineExceeded):
+            fa.result(timeout=0.8)
+        # The reaper fired mid-stall, not after the dispatch resolved.
+        assert time.monotonic() - t0 < 0.9
+        fb = server.submit(_grid(nets[0], "ra", "b"))
+        assert fb.result(timeout=300) is not None
+    # The expired request WAS dispatched (the race is post-re-slice) ...
+    assert probe.calls == 2
+    assert probe.rows[0] == 1
+    snap = server.tracker.snapshot()
+    assert snap["serve/deadline_exceeded"] == 1
+    # ... and its late result was discarded, not delivered.
+    assert snap["serve/results_discarded"] == 1
 
 
 def test_stalled_dispatch_trips_deadlines_without_wedging(toy):
@@ -162,6 +221,36 @@ def test_cancel_before_dispatch_reslices_coalesced_batch(toy):
     assert probe.labels[-1] == ["keep/ra+ra_normalized"]
     snap = server.tracker.snapshot()
     assert snap["serve/dropped_before_dispatch"] == 1
+
+
+def test_submit_input_hardening(toy):
+    """Malformed scheduling inputs fail at submit with NAMED errors —
+    never undefined scheduler behavior (a NaN priority would poison every
+    queue-ordering comparison; a zero deadline is born expired)."""
+    data, nets, init, apply_fn = toy
+    server = serving.ScenarioServer(
+        init, apply_fn, data, _cfg(),
+        serve=serving.ServeConfig(tenant_weights={"alice": 2.0}),
+    )
+    g = _grid(nets[0], "ra", "v")
+    with server:
+        for bad_deadline in (0.0, -1.0, float("nan"), float("inf")):
+            with pytest.raises(serving.InvalidRequest):
+                server.submit(g, deadline_s=bad_deadline)
+        for bad_priority in (float("nan"), 1.5, "high"):
+            with pytest.raises(serving.InvalidRequest):
+                server.submit(g, priority=bad_priority)
+        # With a declared roster, unknown tenants are rejected by name;
+        # the default tenant is always admitted.
+        with pytest.raises(serving.UnknownTenant):
+            server.submit(g, tenant="mallory")
+        assert server.submit(g, tenant="alice").result(timeout=300)
+        assert server.submit(g).result(timeout=300)
+    assert server.tracker.snapshot()["serve/requests"] == 2
+    # NaN / non-positive fair-share weights are config errors, up front.
+    for bad in ({"a": float("nan")}, {"a": 0.0}, {"a": -1.0}):
+        with pytest.raises(ValueError):
+            serving.ServeConfig(tenant_weights=bad)
 
 
 def test_hard_stop_fails_all_pending_futures(toy):

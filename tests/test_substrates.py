@@ -133,3 +133,58 @@ def test_checkpoint_latest_step_disambiguates():
         assert checkpoint.latest_step(d) is None
         checkpoint.save(d, {"a": jnp.zeros(2)}, step=7)
         assert checkpoint.latest_step(d) == 7
+
+
+def test_checkpoint_save_is_atomic_no_partial_files():
+    """`save` stages in a temp dir and `os.replace`s into place: after a
+    save the directory holds exactly the two final files (no temp
+    leftovers), and an overwriting save fully replaces BOTH of them."""
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, {"a": jnp.zeros(3)}, step=1)
+        assert sorted(os.listdir(d)) == ["arrays.npz", "manifest.json"]
+        checkpoint.save(d, {"a": jnp.ones(3)}, step=2)
+        assert sorted(os.listdir(d)) == ["arrays.npz", "manifest.json"]
+        back = checkpoint.restore(d, {"a": jnp.zeros(3)})
+        np.testing.assert_array_equal(np.asarray(back["a"]), np.ones(3))
+        assert checkpoint.latest_step(d) == 2
+
+
+def test_checkpoint_torn_write_raises_corrupt():
+    """The three torn states a crash can leave: manifest without payload,
+    payload/manifest from different saves, wrong array count — each is a
+    named `CorruptCheckpoint`, and `latest_step` refuses to resume it."""
+    tree = {"a": jnp.arange(4.0), "b": jnp.zeros((2, 2))}
+    like = jax.tree.map(jnp.zeros_like, tree)
+
+    # Manifest present, payload missing.
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, tree, step=3)
+        os.unlink(os.path.join(d, "arrays.npz"))
+        with pytest.raises(checkpoint.CorruptCheckpoint, match="no arrays"):
+            checkpoint.restore(d, like)
+        with pytest.raises(checkpoint.CorruptCheckpoint):
+            checkpoint.latest_step(d)
+
+    # Payload and manifest from DIFFERENT saves (the one torn window the
+    # replace ordering leaves open): new arrays, old manifest.
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, tree, step=3)
+        old_manifest = open(os.path.join(d, "manifest.json")).read()
+        checkpoint.save(d, jax.tree.map(lambda x: x + 1, tree), step=4)
+        with open(os.path.join(d, "manifest.json"), "w") as f:
+            f.write(old_manifest)
+        with pytest.raises(checkpoint.CorruptCheckpoint, match="save_id"):
+            checkpoint.restore(d, like)
+        with pytest.raises(checkpoint.CorruptCheckpoint):
+            checkpoint.latest_step(d)
+
+    # Manifest promises more arrays than the payload holds.
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, tree, step=3)
+        import json
+        man_path = os.path.join(d, "manifest.json")
+        man = json.load(open(man_path))
+        man["keys"].append("['extra']")
+        json.dump(man, open(man_path, "w"))
+        with pytest.raises(checkpoint.CorruptCheckpoint, match="arrays"):
+            checkpoint.restore(d, like)
