@@ -1,0 +1,109 @@
+"""Compression sweep: exchange codec x protocol x channel error rate.
+
+The paper transmits every model segment uncompressed; DESIGN.md §15 adds a
+traced exchange-codec layer (`core.compression`) between local training and
+the exchange.  This benchmark sweeps the three codec questions at once:
+
+  * codec / ratio — none (the neutral reference) vs top-k segment
+                    sparsification vs stochastic quantization, at several
+                    compression intensities;
+  * protocol      — ra vs aayg (the codec's transmit mask composes with
+                    each protocol's success mask differently);
+  * channel PER   — clean vs harsh packet error rates (compression and
+                    channel losses are BOTH segment erasures, so their
+                    accuracy costs interact).
+
+The full (codec x protocol x PER) cross runs as ONE batched `run_grid`
+dispatch — codec ids dispatch by a traced `lax.switch` exactly like
+protocol ids; ``REPRO_GRID_DEVICES=k`` shards it.  Emits CSV rows plus
+machine-readable ``BENCH_compression.json`` (`common.write_bench`):
+per-scenario final accuracy, the realized bits-on-air fraction
+(`compression.host_factor`), and the one-dispatch wall clock.
+
+Tiny mode for CI smoke: ``REPRO_BENCH_TINY=1`` shrinks rounds/points so
+the module is a seconds-scale smoke test.
+"""
+import os
+import time
+
+from benchmarks import common
+from repro.core import compression
+from repro.fl import scenarios
+
+
+def _tiny() -> bool:
+    return os.environ.get("REPRO_BENCH_TINY", "").strip() not in ("", "0")
+
+
+# (label, codec, ratio): the neutral reference point plus both lossy
+# codecs at moderate and aggressive intensities.
+CODECS = (
+    ("id", "none", 1.0),
+    ("topk50", "topk", 0.5),
+    ("topk25", "topk", 0.25),
+    ("q8", "quant", 0.25),      # 8 of 32 bits per value
+    ("q4", "quant", 0.125),     # 4 of 32 bits per value
+)
+CODECS_TINY = (
+    ("id", "none", 1.0),
+    ("topk50", "topk", 0.5),
+    ("q8", "quant", 0.25),
+)
+PACKET_BITS = (2_000, 25_000)   # clean vs harsh PER (common.HARSH_TX_DBM)
+N_ROUNDS = 12
+SEG_LEN = 256
+
+
+def build_grid() -> scenarios.ScenarioGrid:
+    codecs = CODECS_TINY if _tiny() else CODECS
+    nets = [
+        (f"pkt{bits // 1000}k",
+         common.standard_net(packet_len_bits=bits,
+                             tx_power_dbm=common.HARSH_TX_DBM))
+        for bits in PACKET_BITS
+    ]
+    protocols = ([("ra", "ra_normalized")] if _tiny()
+                 else [("ra", "ra_normalized"), ("aayg", "ra_normalized")])
+    return scenarios.ScenarioGrid.product(
+        networks=nets,
+        protocols=protocols,
+        codecs=list(codecs),
+    )
+
+
+def main() -> None:
+    n_rounds = 4 if _tiny() else N_ROUNDS
+    codecs = CODECS_TINY if _tiny() else CODECS
+    factors = {
+        label: compression.host_factor(
+            codec, ratio, n_segments=64, dtype_bits=32
+        )
+        for label, codec, ratio in codecs
+    }
+    grid = build_grid()
+    t0 = time.time()
+    res = common.run_standard_grid(grid, n_rounds=n_rounds, seg_len=SEG_LEN)
+    t_total = time.time() - t0
+    us = t_total * 1e6 / len(grid)
+    rows = []
+    for label, one in res.items():
+        cod_label = label.rsplit("/", 1)[-1]
+        factor = factors.get(cod_label, 1.0)
+        acc = float(one.mean_acc[-1])
+        common.emit(f"fig_compression/{label}", us,
+                    f"final_acc={acc:.3f};bits_factor={factor:.3f}")
+        rows.append({"name": label, "us_per_call": us, "final_acc": acc,
+                     "bits_factor": factor})
+    rows.append({
+        "name": "timing", "us_per_call": t_total * 1e6,
+        "scenarios": len(grid), "one_dispatch_s": round(t_total, 2),
+        "rounds": n_rounds,
+    })
+    common.emit("fig_compression/timing", t_total * 1e6,
+                f"scenarios={len(grid)};one_dispatch_s={t_total:.2f};"
+                f"rounds={n_rounds}")
+    common.write_bench("compression", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   fig10  — aggregation-coefficient distributions (paper Fig. 10)
   fig_dynamic — link-churn x client-sampling sweep (DESIGN.md §8)
   fig_selection — sampling policy x mobility churn (DESIGN.md §10)
+  fig_compression — exchange codec x protocol x PER sweep (DESIGN.md §15)
   fig_nwp — transformer next-word prediction via the model zoo (DESIGN.md §13)
   kernel — Pallas kernels vs references
   roofline — dry-run derived roofline table (DESIGN.md §Roofline)
@@ -22,7 +23,8 @@ import traceback
 
 MODULES = ["fig2_protocols", "fig3_sweep", "table3_overhead", "fig8_bias",
            "fig9_relays", "fig10_coeffs", "fig_dynamic", "fig_selection",
-           "fig_nwp", "kernel_bench", "roofline", "bench_serve"]
+           "fig_compression", "fig_nwp", "kernel_bench", "roofline",
+           "bench_serve"]
 
 
 def main() -> None:

@@ -3,14 +3,21 @@
 Also surfaces the Section-IV bandwidth-constrained variant: R&A with only
 the top-k admitted homologous route-sets (`routing.admit_homologous_routes`
 priority, `routing.admitted_rho_mask` channel view) — the open-loop twin of
-the closed-loop ``bandwidth`` selection policy (DESIGN.md §10).
+the closed-loop ``bandwidth`` selection policy (DESIGN.md §10) — and the
+COMPRESSED R&A rows (DESIGN.md §15): the same route schedule with every
+payload shrunk by an exchange codec (`compression.host_factor` bits-on-air
+fraction, `Overhead.compressed`), top-k at ratio 0.25 and 8-bit stochastic
+quantization.
 """
 import numpy as np
 
 from benchmarks import common
-from repro.core import overhead, routing, topology
+from repro.core import compression, overhead, routing, topology
 
 ADMIT_CAP = 5      # bandwidth-constrained rows: top-5 admitted sources
+# Compressed R&A rows: segment top-k at ratio 0.25, 8-of-32-bit quant.
+TOPK_FACTOR = compression.host_factor("topk", 0.25, n_segments=64)
+QUANT_FACTOR = compression.host_factor("quant", 0.25)
 
 
 def main() -> None:
@@ -34,6 +41,8 @@ def main() -> None:
         for mname, mbits in models_mbits.items():
             ra = overhead.ra_overhead(nxt, 10, mbits)
             rb = overhead.ra_overhead(nxt, 10, mbits, sources=admitted)
+            rt = ra.compressed(TOPK_FACTOR)
+            rq = ra.compressed(QUANT_FACTOR)
             a1 = overhead.aayg_overhead(adj, 10, mbits, 1)
             a5 = overhead.aayg_overhead(adj, 10, mbits, 5)
             cf = overhead.cfl_overhead(nxt, 10, mbits, 6)
@@ -42,6 +51,10 @@ def main() -> None:
                 f"RA_slots={ra.n_slots};RA_Mbits={ra.traffic_mbits:.0f};"
                 f"RAadm{ADMIT_CAP}_slots={rb.n_slots};"
                 f"RAadm{ADMIT_CAP}_Mbits={rb.traffic_mbits:.0f};"
+                f"RAtopk25_slots={rt.n_slots};"
+                f"RAtopk25_Mbits={rt.traffic_mbits:.0f};"
+                f"RAq8_slots={rq.n_slots};"
+                f"RAq8_Mbits={rq.traffic_mbits:.0f};"
                 f"AaYG1_slots={a1.n_slots};AaYG1_Mbits={a1.traffic_mbits:.0f};"
                 f"AaYG5_slots={a5.n_slots};AaYG5_Mbits={a5.traffic_mbits:.0f};"
                 f"CFL_slots={cf.n_slots};CFL_Mbits={cf.traffic_mbits:.0f}",

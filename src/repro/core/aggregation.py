@@ -154,6 +154,29 @@ def mask_senders(e: jnp.ndarray, participation: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(masked, jnp.eye(n)[:, :, None])
 
 
+def apply_transmit_mask(e: jnp.ndarray, tx: jnp.ndarray) -> jnp.ndarray:
+    """Compose a per-segment TRANSMIT mask into a success mask.
+
+    ``tx`` is (N, L) with tx[m, l] = 1 iff sender m actually put segment l
+    on the air (`compression.encode`'s top-k sparsification output).  A
+    pruned segment is never sent, so it can neither fail nor be delivered:
+    it leaves e exactly like a sampled-out sender leaves `mask_senders` —
+    zeroed for every receiver, with the own-model diagonal kept at 1 (a
+    client always holds every one of its own segments, pruned or not).
+    Downstream this gives the codec semantics for free: adaptive
+    normalization renormalizes over transmitted AND delivered senders;
+    substitution folds the pruned mass onto the receiver's own block.
+    An all-ones tx returns ``e`` bitwise unchanged; composition with
+    `mask_senders` is order-independent (both are and-then-or-diagonal).
+    """
+    n = e.shape[0]
+    if e.dtype == jnp.bool_:
+        masked = e & (tx[:n, None, :] > 0)
+        return masked | jnp.eye(n, dtype=jnp.bool_)[:, :, None]
+    masked = e * tx[:n, None, :]
+    return jnp.maximum(masked, jnp.eye(n)[:, :, None])
+
+
 def keep_nonparticipants(participation: jnp.ndarray, aggregated: jnp.ndarray,
                          w_seg: jnp.ndarray) -> jnp.ndarray:
     """Sampled-out RECEIVERS keep their own segments untouched."""
@@ -186,8 +209,21 @@ def _pallas_branches():
     return (_ra, _sub)
 
 
+def _pallas_branches_tx():
+    from repro.kernels import ops
+
+    def _ra(w_seg, p, e, tx):
+        return ops.ra_aggregate(w_seg, p, e, tx=tx, mode="ra_normalized")
+
+    def _sub(w_seg, p, e, tx):
+        return ops.ra_aggregate(w_seg, p, e, tx=tx, mode="substitution")
+
+    return (_ra, _sub)
+
+
 def apply_mode(mode_id: jnp.ndarray, w_seg: jnp.ndarray, p: jnp.ndarray,
-               e: jnp.ndarray, *, impl: str | None = None) -> jnp.ndarray:
+               e: jnp.ndarray, *, tx: jnp.ndarray | None = None,
+               impl: str | None = None) -> jnp.ndarray:
     """Aggregate with a *traced* mechanism selector (see MODE_IDS).
 
     ``impl`` selects the execution substrate STATICALLY (see the module
@@ -195,9 +231,21 @@ def apply_mode(mode_id: jnp.ndarray, w_seg: jnp.ndarray, p: jnp.ndarray,
     under vmap), 'auto'/None (env var, then backend default).  Both
     substrates agree to <= 1e-5 (tests/test_agg_substrate.py); the jnp
     branch is bit-identical to the historical path.
+
+    ``tx`` is an optional (N, L) per-segment transmit mask (see
+    `apply_transmit_mask`).  It is a STATIC presence choice — the codec
+    layer passes one whenever a codec is configured — so the tx-free trace
+    stays byte-for-byte the pre-codec program.  On the Pallas substrate the
+    mask is forwarded to the kernel's sparsity-aware variant (masked
+    sender blocks are skipped in-kernel rather than pre-composed).
     """
     if resolve_impl(impl) == "pallas":
-        return jax.lax.switch(mode_id, _pallas_branches(), w_seg, p, e)
+        if tx is None:
+            return jax.lax.switch(mode_id, _pallas_branches(), w_seg, p, e)
+        return jax.lax.switch(mode_id, _pallas_branches_tx(),
+                              w_seg, p, e, tx)
+    if tx is not None:
+        e = apply_transmit_mask(e, tx)
     return jax.lax.switch(mode_id, _MODE_BRANCHES, w_seg, p, _as_f32_mask(e))
 
 

@@ -31,9 +31,25 @@ def num_segments(m_params: int, seg_len: int) -> int:
     return -(-m_params // seg_len)
 
 
-def packet_len_bits(seg_len: int) -> int:
-    """Packet length in bits for K float32 values (paper: 32K)."""
-    return FLOAT_BITS * seg_len
+def dtype_bits(dtype: Any) -> int:
+    """Bits per value for a given model-state dtype (bf16 -> 16, f32 -> 32).
+
+    The paper's 32-bit packet math was hard-coded; bf16 segment state
+    (transformer-scale runs, DESIGN.md §13) halves every packet, and a
+    quantizing codec shrinks it further still — so packet accounting takes
+    bits-per-value as data instead of assuming `FLOAT_BITS`.
+    """
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def packet_len_bits(seg_len: int, bits_per_value: int = FLOAT_BITS) -> int:
+    """Packet length in bits for K values of ``bits_per_value`` bits each.
+
+    The paper's default is K float32 values (32K bits); pass
+    ``bits_per_value=dtype_bits(state_dtype)`` for bf16 state, or the
+    codec's realized `compression.quant_bits` for quantized packets.
+    """
+    return bits_per_value * seg_len
 
 
 def stack_to_matrix(stacked: Pytree) -> tuple[jnp.ndarray, Any]:

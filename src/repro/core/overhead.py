@@ -26,6 +26,27 @@ class Overhead:
     n_transmissions: int    # link-level transmissions per round
     traffic_mbits: float    # total network traffic per round (MBits)
 
+    def compressed(self, factor: float) -> "Overhead":
+        """The overhead after an exchange codec shrinks every payload.
+
+        ``factor`` is the realized bits-on-air fraction in (0, 1]
+        (`compression.host_factor`): traffic scales exactly, and the slot
+        count scales in payload-time units — each transmission still
+        occupies its slot, but the slot is ``factor`` as long, so the
+        per-round airtime budget is ``ceil(n_slots * factor)`` equivalent
+        full-payload slots (Table III compressed rows).  The transmission
+        COUNT is unchanged: the codec shortens packets, it does not remove
+        route hops.
+        """
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"compression factor must be in (0, 1], "
+                             f"got {factor}")
+        return Overhead(
+            n_slots=int(np.ceil(self.n_slots * factor)),
+            n_transmissions=self.n_transmissions,
+            traffic_mbits=self.traffic_mbits * factor,
+        )
+
 
 def _greedy_slots(transmissions: list[tuple[int, int]]) -> int:
     """Greedy coloring: assign each (tx, rx) transmission the first slot in

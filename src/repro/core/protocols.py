@@ -65,6 +65,7 @@ def ra_round_seg(
     mode_id: jnp.ndarray,
     participation: jnp.ndarray | None = None,
     *,
+    tx_mask: jnp.ndarray | None = None,
     agg_impl: str | None = None,
     seg_total: int | None = None,
     seg_start: jnp.ndarray | int = 0,
@@ -78,6 +79,15 @@ def ra_round_seg(
     segments untouched.  ``participation=None`` keeps the exact static
     trace.  ``agg_impl`` selects the aggregation substrate (STATIC — see
     `aggregation.apply_mode`).
+
+    ``tx_mask`` is the codec layer's optional (N, S) per-segment TRANSMIT
+    mask at the FULL segment width (`repro.core.compression`): pruned
+    segments were never sent, so they compose into ``e`` exactly like
+    sampled-out senders (`aggregation.apply_transmit_mask`) — and the
+    returned ``e`` (hence the bias diagnostic) reflects the realized,
+    transmit-masked coefficients.  The aggregation pass receives the mask
+    separately so the Pallas substrate can run its sparsity-aware kernel
+    variant.  ``tx_mask=None`` keeps the exact pre-codec trace.
 
     Model-axis sharding (DESIGN.md §13): with ``seg_total=S`` (STATIC, the
     GLOBAL segment count) the success mask is sampled at the FULL
@@ -96,7 +106,13 @@ def ra_round_seg(
     if participation is not None:
         e = aggregation.mask_senders(e, participation)
     e_loc = e if seg_total is None else errors.local_slice(e, l, seg_start)
-    out = aggregation.apply_mode(mode_id, w_seg, p, e_loc, impl=agg_impl)
+    tx_loc = None
+    if tx_mask is not None:
+        e = aggregation.apply_transmit_mask(e, tx_mask)
+        tx_loc = (tx_mask if seg_total is None
+                  else errors.local_slice(tx_mask, l, seg_start))
+    out = aggregation.apply_mode(mode_id, w_seg, p, e_loc, tx=tx_loc,
+                                 impl=agg_impl)
     if participation is not None:
         out = aggregation.keep_nonparticipants(participation, out, w_seg)
     return out, e
@@ -111,6 +127,7 @@ def aayg_round_seg(
     *,
     n_mixes: int = 1,
     participation: jnp.ndarray | None = None,
+    tx_mask: jnp.ndarray | None = None,
     agg_impl: str | None = None,
     seg_total: int | None = None,
     seg_start: jnp.ndarray | int = 0,
@@ -124,6 +141,13 @@ def aayg_round_seg(
     broadcast nor update in any of the J mixes.  ``seg_total``/``seg_start``
     select a model-shard window of full-segment-count mask draws (same
     contract as `ra_round_seg`).
+
+    The codec's ``tx_mask`` ((N, S) full width) is applied to EVERY mix:
+    the codec runs once per round, before the exchange, so a pruned
+    segment stays off the air for all J broadcasts (intermediate mix
+    results are not re-encoded — matching the gossip-with-compression
+    baseline of arXiv 2405.12894, which compresses the local state once
+    per communication round).
     """
     n, l, _ = w_seg.shape
     eps = link_eps[:n, :n]
@@ -135,6 +159,8 @@ def aayg_round_seg(
         e = u < eps[:, :, None]                     # packed bool_ mask
         if participation is not None:
             e = e & (participation[:n, None, None] > 0)
+        if tx_mask is not None:
+            e = e & (tx_mask[:n, None, :] > 0)
         e = e | jnp.eye(n, dtype=jnp.bool_)[:, :, None]  # own model present
         if seg_total is not None:
             e = errors.local_slice(e, l, seg_start)
@@ -156,6 +182,7 @@ def cfl_round_seg(
     aggregator: jnp.ndarray,
     participation: jnp.ndarray | None = None,
     *,
+    tx_mask: jnp.ndarray | None = None,
     seg_total: int | None = None,
     seg_start: jnp.ndarray | int = 0,
 ) -> jnp.ndarray:
@@ -171,6 +198,13 @@ def cfl_round_seg(
     this also keeps every per-segment normalization denominator >= p_agg,
     so no receiver can be handed a zero model when all sampled uplinks
     fail.
+
+    The codec's ``tx_mask`` ((N, S) full width) prunes the uplink — a
+    client never uploads a pruned segment — composed BEFORE the
+    aggregator's own-row restore (the star center holds its own model
+    locally; no transmission is involved).  On the downlink the aggregator
+    is the sender, so ITS row prunes the broadcast; receivers fall back to
+    their own segments exactly like a downlink erasure.
     """
     n, l, k = w_seg.shape
     l_draw = l if seg_total is None else seg_total
@@ -180,12 +214,15 @@ def cfl_round_seg(
         participation = jnp.maximum(
             participation[:n], jax.nn.one_hot(aggregator, n, dtype=jnp.float32)
         )
+    tx_f = None if tx_mask is None else (tx_mask[:n] > 0).astype(jnp.float32)
 
     # Uplink success mask for each sender/segment, destination = aggregator.
     rho_up = jnp.take(rho[:n], aggregator, axis=1)            # (N,)
     e_up = (jax.random.uniform(kup, (n, l_draw)) < rho_up[:, None]).astype(
         jnp.float32
     )
+    if tx_f is not None:
+        e_up = e_up * tx_f
     e_up = e_up.at[aggregator].set(1.0)
     if participation is not None:
         e_up = e_up * participation[:, None]
@@ -210,6 +247,8 @@ def cfl_round_seg(
     e_dn = (jax.random.uniform(kdn, (n, l_draw)) < rho_dn[:, None]).astype(
         jnp.float32
     )
+    if tx_f is not None:
+        e_dn = e_dn * jnp.take(tx_f, aggregator, axis=0)[None, :]
     e_dn = e_dn.at[aggregator].set(1.0)
     if participation is not None:
         e_dn = e_dn * participation[:, None]
@@ -239,6 +278,8 @@ def dispatch_round_seg(
     *,
     n_mixes: int = 1,
     participation: jnp.ndarray | None = None,
+    tx_mask: jnp.ndarray | None = None,
+    w_raw: jnp.ndarray | None = None,
     agg_impl: str | None = None,
     track_bias: bool = True,
     seg_total: int | None = None,
@@ -268,6 +309,15 @@ def dispatch_round_seg(
     carve-out: C-FL's star center always participates (see
     `cfl_round_seg`).  None (the default) keeps the exact static trace.
 
+    The codec layer (`repro.core.compression`) threads in through two
+    optional arguments: ``tx_mask`` — the (N, S) full-width per-segment
+    transmit mask, composed into every LOSSY protocol's channel draw (R&A
+    and AaYG success masks, C-FL up/downlink) — and ``w_raw`` — the
+    UNENCODED segments, used by the exchange-free branches (ideal C-FL and
+    "none"): a codec transforms what goes over the air, and those branches
+    put nothing on the air, so they must not see encoded values.  Both are
+    STATIC presence choices; None keeps the exact pre-codec trace.
+
     Two STATIC compute knobs (they change the compiled program, not its
     semantics): ``agg_impl`` selects the aggregation substrate
     (`aggregation.apply_mode`), and ``track_bias=False`` skips the R&A bias
@@ -278,34 +328,36 @@ def dispatch_round_seg(
     e_ones = jnp.ones((n, n, l if seg_total is None else seg_total),
                       jnp.bool_)
     nan = jnp.asarray(jnp.nan, jnp.float32)
+    w_keep = w_seg if w_raw is None else w_raw
 
     def b_ra(_):
         out, e = ra_round_seg(w_seg, p, rho, key, mode_id, participation,
-                              agg_impl=agg_impl, seg_total=seg_total,
-                              seg_start=seg_start)
+                              tx_mask=tx_mask, agg_impl=agg_impl,
+                              seg_total=seg_total, seg_start=seg_start)
         bias = (jnp.mean(aggregation.bias_sq_norm_fused(p, e))
                 if track_bias else nan)
         return out, e, bias
 
     def b_aayg(_):
         out = aayg_round_seg(w_seg, p, link_eps, key, mode_id, n_mixes=n_mixes,
-                             participation=participation, agg_impl=agg_impl,
+                             participation=participation, tx_mask=tx_mask,
+                             agg_impl=agg_impl,
                              seg_total=seg_total, seg_start=seg_start)
         return out, e_ones, nan
 
     def b_cfl(_):
         out = cfl_round_seg(w_seg, p, rho, key, mode_id, aggregator,
-                            participation, seg_total=seg_total,
-                            seg_start=seg_start)
+                            participation, tx_mask=tx_mask,
+                            seg_total=seg_total, seg_start=seg_start)
         return out, e_ones, nan
 
     def b_ideal(_):
-        out = ideal_round_seg(w_seg, p, participation)
+        out = ideal_round_seg(w_keep, p, participation)
         return out, e_ones, jnp.asarray(0.0, jnp.float32)
 
     def b_none(_):
         # "none" never exchanges; non-participants are untouched trivially.
-        return w_seg, e_ones, nan
+        return w_keep, e_ones, nan
 
     return jax.lax.switch(
         protocol_id, (b_ra, b_aayg, b_cfl, b_ideal, b_none), None

@@ -29,6 +29,14 @@ protocol ids — a grid sweeping policies stays ONE vmapped/sharded dispatch):
                      exactly `routing.admitted_rho_mask` at the
                      success-mask level (`aggregation.mask_senders` zeroes
                      the same sender rows).
+  * ``budget``     — JOINT selection + compression under a per-round slot
+                     budget (DESIGN.md §15): ``select_frac * N`` full-model
+                     transmission equivalents are waterfilled down the
+                     Section-IV admission ranking (`budget_allocation`) —
+                     each client gets a per-client compress ratio in
+                     [0, 1], the budget decides both WHO participates
+                     (allocation > 0) and HOW MUCH each participant
+                     compresses (`budget_ratio` feeds the scenario codec).
 
 Every policy composes with the scenario's open-loop mask: clients the
 precomputed schedule rules out are unavailable (score ``-inf``) and never
@@ -56,7 +64,8 @@ import jax.numpy as jnp
 from repro.core import routing
 
 # Traced policy selector values (order = lax.switch branch order).
-POLICY_IDS = {"uniform": 0, "loss": 1, "grad_norm": 2, "bandwidth": 3}
+POLICY_IDS = {"uniform": 0, "loss": 1, "grad_norm": 2, "bandwidth": 3,
+              "budget": 4}
 
 
 class SelectionSignals(NamedTuple):
@@ -117,6 +126,66 @@ def topk_mask(scores: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
     return (ranks < k).astype(jnp.float32)
 
 
+def budget_allocation(
+    base_mask: jnp.ndarray,
+    p: jnp.ndarray,
+    rho: jnp.ndarray,
+    select_frac: jnp.ndarray,
+) -> jnp.ndarray:
+    """Per-client transmit budget waterfill (the ``budget`` policy's core).
+
+    The round's communication budget is ``B = select_frac * N`` full-model
+    transmission equivalents (Section-IV slot units: one unit = one
+    client's uncompressed model through its homologous route set).  The
+    budget is waterfilled down the Section-IV admission ranking
+    (`routing.admission_scores`, availability-gated): the client ranked r
+    receives ``clip(B - r, 0, 1)`` — full models while budget remains, one
+    fractional allocation at the boundary, nothing after.  The result is a
+    per-client compress ratio in [0, 1] with ``sum <= B`` by construction:
+    a single quantity decides both WHO participates (allocation > 0) and
+    HOW MUCH each participant compresses.
+    """
+    n = base_mask.shape[0]
+    budget = jnp.asarray(select_frac, jnp.float32) * n
+    avail = base_mask > 0
+    scores = jnp.where(avail, routing.admission_scores(p, rho[:n, :n]),
+                       -jnp.inf)
+    order = jnp.argsort(-scores)                     # descending, stable
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    alloc = jnp.clip(budget - ranks.astype(jnp.float32), 0.0, 1.0)
+    # Leftover budget must never reach unavailable (-inf-ranked) clients.
+    return alloc * avail.astype(jnp.float32)
+
+
+def budget_ratio(
+    policy_id: jnp.ndarray,
+    base_mask: jnp.ndarray,
+    p: jnp.ndarray,
+    rho: jnp.ndarray,
+    select_frac: jnp.ndarray,
+    base_ratio: jnp.ndarray,
+) -> jnp.ndarray:
+    """The (N,) per-client compress ratio a codec scenario realizes.
+
+    Under the ``budget`` policy: the waterfill allocation scaled by the
+    scenario's own ``compress_ratio`` (so the grid axis still modulates
+    intensity).  Every other policy broadcasts the scalar ratio unchanged
+    — value-identical to the scalar the open loop would have used.
+    Zero-allocation clients get ratio 0; they are exactly the clients the
+    budget mask rules out, so their codec output never transmits (and
+    `compression.keep_count` / `quant_bits` clip at 1 regardless).
+    """
+    n = base_mask.shape[0]
+    scalar = jnp.broadcast_to(
+        jnp.asarray(base_ratio, jnp.float32).reshape(()), (n,)
+    )
+    alloc = budget_allocation(base_mask, p, rho, select_frac)
+    return jnp.where(policy_id == POLICY_IDS["budget"], alloc * scalar,
+                     scalar)
+
+
 def select_clients(
     policy_id: jnp.ndarray,
     base_mask: jnp.ndarray,
@@ -163,8 +232,13 @@ def select_clients(
         scores = routing.admission_scores(p, rho[:n, :n])
         return topk_mask(gated(scores), k) * base_mask
 
+    def b_budget(_):
+        alloc = budget_allocation(base_mask, p, rho, select_frac)
+        return (alloc > 0).astype(jnp.float32)
+
     return jax.lax.switch(
-        policy_id, (b_uniform, b_loss, b_grad_norm, b_bandwidth), None
+        policy_id, (b_uniform, b_loss, b_grad_norm, b_bandwidth, b_budget),
+        None,
     )
 
 

@@ -49,6 +49,19 @@ of a precomputed mask:
                       masks.  Any ``participation`` axis becomes the
                       availability base the policies refine.
 
+Codec axes (DESIGN.md §15) — lossy model-exchange compression as a grid
+dimension:
+
+  * exchange codec  — ``codecs=[(label, codec, ratio)]`` with codec in
+                      `core.compression.CODEC_IDS` (none / topk / quant)
+                      and ratio the traced compression intensity in
+                      (0, 1]: each client's trained update is encoded
+                      between local training and the exchange, the
+                      codec's per-segment transmit mask composes with the
+                      channel success mask, and a ratio x protocol x PER
+                      sweep is still ONE dispatch.  The ``none`` codec is
+                      bitwise identical to a codec-free grid.
+
 Grid leaves are kept HOST-SIDE (numpy): the per-dispatch uniform-field
 hoisting test then costs no device sync, and arrays only move to devices
 at dispatch.
@@ -111,7 +124,7 @@ _SHARD_MAP_NO_CHECK = {
      else "check_rep"): False
 }
 
-from repro.core import protocols, selection, topology
+from repro.core import compression, protocols, selection, topology
 from repro.data.synthetic import FederatedDataset
 from repro.fl import simulator
 from repro.launch import mesh as launch_mesh
@@ -375,6 +388,7 @@ class ScenarioGrid:
         has_part = [g.scenarios.participation is not None for g in grids]
         has_epochs = [g.scenarios.local_epochs is not None for g in grids]
         any_policy = any(g.scenarios.policy_id is not None for g in grids)
+        any_codec = any(g.scenarios.codec_id is not None for g in grids)
         if any(has_epochs) and not all(has_epochs):
             raise ValueError(
                 "cannot concat grids with and without per-client "
@@ -421,8 +435,16 @@ class ScenarioGrid:
                 # (frac unread), so policy-free grids join bitwise intact.
                 pol = np.zeros((len(g),), np.int32)
                 frac = np.ones((len(g),), np.float32)
+            cod, ratio = s.codec_id, s.compress_ratio
+            if any_codec and cod is None:
+                # Neutral fill-in: the `none` codec at ratio 1 is bitwise
+                # the codec-free exchange, so codec-free grids join intact.
+                cod = np.full((len(g),), compression.CODEC_IDS["none"],
+                              np.int32)
+                ratio = np.ones((len(g),), np.float32)
             return s._replace(link_eps=le, rho=None, participation=part,
-                              policy_id=pol, select_frac=frac)
+                              policy_id=pol, select_frac=frac,
+                              codec_id=cod, compress_ratio=ratio)
 
         stacked = jax.tree.map(
             lambda *leaves: np.concatenate([np.asarray(l) for l in leaves]),
@@ -443,6 +465,7 @@ class ScenarioGrid:
         lrs: Iterable[float] = (0.05,),
         participation: Sequence[tuple[str, Any]] | None = None,
         sampling_policies: Sequence[tuple[str, str, float]] | None = None,
+        codecs: Sequence[tuple[str, str, float]] | None = None,
         local_epochs: Any = None,
         aggregator: int = 6,
     ) -> "ScenarioGrid":
@@ -474,6 +497,14 @@ class ScenarioGrid:
             per-round mask is computed inside the round scan from live
             signals; a ``participation`` axis, when also given, is the
             availability base every policy refines (DESIGN.md §10).
+          codecs: optional exchange-codec axis of (label, codec, ratio)
+            triples — codec a `core.compression.CODEC_IDS` name (none /
+            topk / quant), ratio the traced compression intensity in
+            (0, 1] (fraction of segments kept under ``topk``, fraction
+            of value bits under ``quant``; unread by ``none``).  Encoded
+            between local training and the exchange (DESIGN.md §15); the
+            ``none`` codec traces a transmit-everything mask whose
+            results are bitwise those of a codec-free grid.
           local_epochs: optional (N,) per-client epoch vector shared by
             every grid point (values clip to the SimConfig bound).
           aggregator: C-FL star center (shared; only read by cfl scenarios).
@@ -581,14 +612,38 @@ class ScenarioGrid:
         else:
             pol_axis = [(None, None, None)]
 
+        # The exchange-codec axis (None -> no codec fields: the grid
+        # traces the exact codec-free program).
+        if codecs is not None:
+            if not codecs:
+                raise ValueError("codecs axis needs at least one point")
+            cod_axis = []
+            for cod_label, codec, ratio in codecs:
+                if codec not in compression.CODEC_IDS:
+                    raise ValueError(
+                        f"unknown codec {codec!r}: choose from "
+                        f"{sorted(compression.CODEC_IDS)}"
+                    )
+                if not 0.0 < float(ratio) <= 1.0:
+                    raise ValueError(
+                        f"compress ratio must be in (0, 1], got {ratio}"
+                    )
+                cod_axis.append((
+                    cod_label,
+                    np.asarray(compression.CODEC_IDS[codec], np.int32),
+                    np.asarray(ratio, np.float32),
+                ))
+        else:
+            cod_axis = [(None, None, None)]
+
         epochs_vec = (None if local_epochs is None
                       else np.asarray(local_epochs, np.int32))
 
         rows, labels = [], []
         for (net_label, links), (proto, mode), seed, lr, (part_label, mask), \
-                (pol_label, pol_id, frac) \
+                (pol_label, pol_id, frac), (cod_label, cod_id, cod_ratio) \
                 in itertools.product(topo_axis, protocols, seeds, lrs,
-                                     part_axis, pol_axis):
+                                     part_axis, pol_axis, cod_axis):
             rows.append(simulator.Scenario(
                 link_eps=links,
                 seed=np.asarray(seed, np.int32),
@@ -600,6 +655,8 @@ class ScenarioGrid:
                 local_epochs=epochs_vec,
                 policy_id=pol_id,
                 select_frac=frac,
+                codec_id=cod_id,
+                compress_ratio=cod_ratio,
             ))
             parts = [net_label, f"{proto}+{mode}"]
             if len(seeds) > 1:
@@ -610,6 +667,8 @@ class ScenarioGrid:
                 parts.append(part_label)
             if pol_label is not None and len(pol_axis) > 1:
                 parts.append(pol_label)
+            if cod_label is not None and len(cod_axis) > 1:
+                parts.append(cod_label)
             labels.append("/".join(parts))
         if len(set(labels)) != len(labels):
             dups = [l for l, c in Counter(labels).items() if c > 1]
@@ -966,6 +1025,20 @@ def validate_grid(grid: ScenarioGrid, *, n_clients: int | None = None,
             fail(f"select_frac outside (0, 1] in scenario(s) "
                  f"{name_rows(bad)}")
 
+    if s.codec_id is not None:
+        cod = np.asarray(s.codec_id)
+        n_cod = len(compression.CODEC_IDS)
+        bad = (cod < 0) | (cod >= n_cod)
+        if bad.any():
+            fail(f"codec_id out of range [0, {n_cod}) in scenario(s) "
+                 f"{name_rows(bad)} — known codecs: "
+                 f"{sorted(compression.CODEC_IDS)}")
+        ratio = np.asarray(s.compress_ratio)
+        bad = ~(np.isfinite(ratio) & (ratio > 0) & (ratio <= 1))
+        if bad.any():
+            fail(f"compress_ratio outside (0, 1] in scenario(s) "
+                 f"{name_rows(bad)}")
+
     dup = [lbl for lbl, c in Counter(grid.labels).items() if c > 1]
     if dup:
         fail(f"duplicate labels {dup[:3]} — results would be ambiguous")
@@ -1034,6 +1107,7 @@ class GridRunner:
             agg_impl=cfg.agg_impl, eval_every=cfg.eval_every,
             track_bias=cfg.track_bias, model_shards=dm,
             model_axis=launch_mesh.MODEL_AXIS,
+            local_optimizer=cfg.local_optimizer,
         )
         self.sim = self._build_sim(1)
         # One SimPrograms binding per model-axis width (DESIGN.md §13):
@@ -1125,9 +1199,12 @@ class GridRunner:
             self.devices if devices is _INHERIT else devices, sharding
         )
         # Surface PER-packet vs codec-segment mismatches on the grid path
-        # too (one-time warning; see simulator.check_packet_len).
+        # too (one-time warning; see simulator.check_packet_len).  The
+        # per-value bit width follows the bound model's state dtype.
         for bits in getattr(grid, "packet_len_bits", ()):
-            simulator.check_packet_len(bits, self._seg_len)
+            simulator.check_packet_len(
+                bits, self._seg_len, bits_per_value=self.sim.bits_per_value
+            )
         if validate:
             self.validate(grid)
         g = len(grid)

@@ -85,7 +85,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import errors, protocols, routing, selection, topology
+from repro.core import compression, errors, protocols, routing, selection, topology
 from repro.data.synthetic import FederatedDataset
 from repro.models.smallnets import accuracy, ce_loss
 
@@ -94,6 +94,12 @@ Pytree = Any
 # Default mesh axis name for model-axis (segment) sharding — DESIGN.md §13.
 # `launch.mesh.MODEL_AXIS` re-exports it for the mesh-builder layer.
 MODEL_AXIS = "model"
+
+# fold_in tag deriving the codec's private key from the round key.  The
+# round key itself still feeds the exchange UNTOUCHED, so configuring
+# codec="none" draws the same channel randomness as no codec at all —
+# load-bearing for the neutral codec's bitwise guarantee (DESIGN.md §15).
+_CODEC_KEY_TAG = 0x434F4445  # "CODE"
 
 
 class PacketLengthMismatchWarning(UserWarning):
@@ -145,6 +151,11 @@ class SimConfig:
     agg_impl: str = "auto"        # auto | jnp | pallas (aggregation substrate)
     eval_every: int = 1           # evaluate acc/loss every k-th round
     track_bias: bool = True       # False: skip the R&A bias diagnostic
+    # Exchange codec (DESIGN.md §15) — per-scenario defaults like protocol:
+    codec: str | None = None      # None | none | topk | quant
+    compress_ratio: float = 1.0   # traced codec intensity, (0, 1]
+    # Local-update rule (static; None = the paper's plain full-batch GD):
+    local_optimizer: Any = None   # None | optimizers name | Optimizer | factory
 
     @property
     def packet_len_bits(self) -> int:
@@ -175,8 +186,12 @@ class Scenario(NamedTuple):
     vector.  ``policy_id`` / ``select_frac`` select a CLOSED-LOOP sampling
     policy (`core.selection.POLICY_IDS`): the per-round mask is then
     computed inside the round scan from live signals, with the
-    ``participation`` schedule acting as the availability base.  All
-    dynamic fields default to the static behavior.
+    ``participation`` schedule acting as the availability base.
+    ``codec_id`` / ``compress_ratio`` select an exchange codec
+    (`core.compression.CODEC_IDS`, DESIGN.md §15): local models are
+    encoded between training and delivery — and the "budget" sampling
+    policy overrides the ratio per client from its slot-budget waterfill.
+    All dynamic fields default to the static behavior.
     """
 
     link_eps: jnp.ndarray         # (V, V) or (T, V, V)
@@ -190,6 +205,8 @@ class Scenario(NamedTuple):
     local_epochs: Any = None      # (N,) int32 per-client local epochs
     policy_id: Any = None         # () int32   selection.POLICY_IDS
     select_frac: Any = None       # () float32 participant fraction
+    codec_id: Any = None          # () int32   compression.CODEC_IDS
+    compress_ratio: Any = None    # () float32 codec intensity, (0, 1]
 
     def prepare(self) -> "Scenario":
         """Fill the derived min-E2E-PER success matrix (idempotent).
@@ -240,8 +257,8 @@ class Scenario(NamedTuple):
         return s
 
 
-# One-time-warned (packet_len_bits, seg_len) pairs (see below).
-_WARNED_PACKET_PAIRS: set[tuple[int, int]] = set()
+# One-time-warned (packet_len_bits, seg_len, bits_per_value) triples.
+_WARNED_PACKET_PAIRS: set[tuple[int, ...]] = set()
 
 
 def validate_eval_schedule(n_rounds: int, eval_every: int) -> None:
@@ -262,17 +279,21 @@ def validate_eval_schedule(n_rounds: int, eval_every: int) -> None:
 
 
 def check_packet_len(recorded_bits: int | None, seg_len: int,
-                     *, strict: bool = False) -> bool:
+                     *, bits_per_value: int = errors.FLOAT_BITS,
+                     strict: bool = False) -> bool:
     """Validate the codec segment size against a recorded PER packet length.
 
     The channel model samples per-*packet* errors for packets of
     ``recorded_bits`` bits, while the codec transmits segments of
-    ``32 * seg_len`` bits; if they differ, the simulated PER applies to a
-    packet size the codec never sends (the paper itself ships this
-    mismatch: 25,000-bit PER packets vs 1024-float32 segments — see
-    `SimConfig.packet_len_bits`).  Returns True when consistent (or when
-    no packet length was recorded); warns ONCE per distinct
-    (recorded_bits, seg_len) pair otherwise.  Both the scalar path
+    ``bits_per_value * seg_len`` bits; if they differ, the simulated PER
+    applies to a packet size the codec never sends (the paper itself ships
+    this mismatch: 25,000-bit PER packets vs 1024-float32 segments — see
+    `SimConfig.packet_len_bits`).  ``bits_per_value`` comes from the bound
+    model's state dtype (`errors.dtype_bits`; `SimPrograms.bits_per_value`)
+    — before it existed, bf16 segment state was silently priced as float32
+    packets.  Returns True when consistent (or when no packet length was
+    recorded); warns ONCE per distinct (recorded_bits, seg_len,
+    bits_per_value) triple otherwise.  Both the scalar path
     (`make_scenario`) and the grid path (`scenarios.GridRunner.run`, via
     `ScenarioGrid.packet_len_bits`) call this.
 
@@ -282,28 +303,31 @@ def check_packet_len(recorded_bits: int | None, seg_len: int,
     """
     if recorded_bits is None:
         return True
-    implied = errors.packet_len_bits(seg_len)
+    implied = errors.packet_len_bits(seg_len, bits_per_value)
     if int(recorded_bits) == implied:
         return True
     msg = (
         f"network PER model uses {int(recorded_bits)}-bit packets but "
-        f"seg_len={seg_len} transmits {implied}-bit segments; pass "
+        f"seg_len={seg_len} transmits {implied}-bit "
+        f"({bits_per_value}-bit-value) segments; pass "
         "packet_len_bits=cfg.packet_len_bits to the network builder "
         "for a self-consistent channel (the paper's own defaults "
         "carry this mismatch)"
     )
     if strict:
         raise ValueError(msg)
-    pair = (int(recorded_bits), int(seg_len))
-    if pair not in _WARNED_PACKET_PAIRS:
-        _WARNED_PACKET_PAIRS.add(pair)
+    key = (int(recorded_bits), int(seg_len), int(bits_per_value))
+    if key not in _WARNED_PACKET_PAIRS:
+        _WARNED_PACKET_PAIRS.add(key)
         warnings.warn(msg, PacketLengthMismatchWarning, stacklevel=3)
     return False
 
 
-def check_packet_consistency(net: topology.Network, seg_len: int) -> bool:
+def check_packet_consistency(net: topology.Network, seg_len: int,
+                             bits_per_value: int = errors.FLOAT_BITS) -> bool:
     """`check_packet_len` against a network's recorded packet length."""
-    return check_packet_len(getattr(net, "packet_len_bits", None), seg_len)
+    return check_packet_len(getattr(net, "packet_len_bits", None), seg_len,
+                            bits_per_value=bits_per_value)
 
 
 def make_scenario(
@@ -315,6 +339,8 @@ def make_scenario(
     local_epochs: jnp.ndarray | None = None,
     sampling_policy: str | None = None,
     select_frac: float = 0.5,
+    codec: str | None = None,
+    compress_ratio: float | None = None,
 ) -> Scenario:
     """Lift a (Network, SimConfig) pair into a traced Scenario.
 
@@ -326,8 +352,21 @@ def make_scenario(
     `core.selection.POLICY_IDS` name) turns participation CLOSED-LOOP:
     each round selects ``ceil(select_frac * N)`` clients from live signals
     (the ``participation`` schedule, when also given, is the availability
-    base — see DESIGN.md §10).
+    base — see DESIGN.md §10).  ``codec`` (a `core.compression.CODEC_IDS`
+    name; defaults to ``cfg.codec``) encodes the exchange — top-k segment
+    sparsification or stochastic quantization at ``compress_ratio``
+    (defaults to ``cfg.compress_ratio``); codec "none" is the traced
+    neutral point, bit-identical to no codec at all (DESIGN.md §15).
     """
+    codec = cfg.codec if codec is None else codec
+    if codec is not None and codec not in compression.CODEC_IDS:
+        raise ValueError(
+            f"unknown codec {codec!r}: "
+            f"choose from {sorted(compression.CODEC_IDS)}"
+        )
+    ratio = cfg.compress_ratio if compress_ratio is None else compress_ratio
+    if codec is not None and not 0.0 < float(ratio) <= 1.0:
+        raise ValueError(f"compress_ratio must be in (0, 1], got {ratio}")
     check_packet_consistency(net, cfg.seg_len)
     link_eps = net.link_eps if link_schedule is None else link_schedule
     if sampling_policy is not None and sampling_policy not in selection.POLICY_IDS:
@@ -351,6 +390,10 @@ def make_scenario(
                                     jnp.int32)),
         select_frac=(None if sampling_policy is None
                      else jnp.asarray(select_frac, jnp.float32)),
+        codec_id=(None if codec is None
+                  else jnp.asarray(compression.CODEC_IDS[codec], jnp.int32)),
+        compress_ratio=(None if codec is None
+                        else jnp.asarray(ratio, jnp.float32)),
     )
 
 
@@ -416,6 +459,7 @@ class SimPrograms:
     n_segments: int       # S: global segment count of the bound model
     local_segments: int   # L_local = ceil(S / model_shards)
     seg_len: int
+    bits_per_value: int = errors.FLOAT_BITS  # from the bound state dtype
 
 
 def build_sim(
@@ -432,6 +476,7 @@ def build_sim(
     track_bias: bool = True,
     model_shards: int = 1,
     model_axis: str = MODEL_AXIS,
+    local_optimizer: Any = None,
 ) -> SimPrograms:
     """Bind data + statics into the pure scenario programs.
 
@@ -476,17 +521,50 @@ def build_sim(
         seg_start), and metrics come out replicated.  ``model_shards=1``
         (default) needs no mesh and IS the single-device program.
       model_axis: the mesh axis name the sharded program binds.
+      local_optimizer: the per-client local-update rule (STATIC).  ``None``
+        (default) is the paper's plain full-batch GD — the exact historical
+        trace.  Otherwise an `repro.optim.optimizers` name ("sgd",
+        "adamw", ...), an `optimizers.Optimizer` instance (its own lr wins
+        over the scenario's), or a factory ``lr -> Optimizer``.  Named
+        optimizers are built per trace with the TRACED scenario lr, so an
+        lr grid axis still batches; optimizer state is fresh each round
+        (local Adam à la FedAvg: moments do not persist across exchange).
+        ``sgd`` with momentum 0 is the same `p - lr*g` update expression
+        as the built-in GD path (tests pin bitwise equality).
 
     Returns:
       `SimPrograms` with `round_step` / `run_scenario` / `init_scan` /
       `advance_chunk` pure functions.
     """
     from repro.core import aggregation
+    from repro.optim import optimizers
 
     validate_eval_schedule(n_rounds, eval_every)
     if model_shards < 1:
         raise ValueError(f"model_shards={model_shards} must be >= 1")
     agg_impl = aggregation.resolve_impl(agg_impl)
+
+    if local_optimizer is None:
+        opt_factory = None
+    elif isinstance(local_optimizer, str):
+        optimizers.get(local_optimizer, 0.0)   # fail on unknown names NOW
+        _name = local_optimizer
+
+        def opt_factory(lr):
+            return optimizers.get(_name, lr)
+    elif isinstance(local_optimizer, optimizers.Optimizer):
+        _opt = local_optimizer
+
+        def opt_factory(lr):
+            return _opt
+    elif callable(local_optimizer):
+        opt_factory = local_optimizer
+    else:
+        raise ValueError(
+            "local_optimizer must be None, an optimizer name, an "
+            f"Optimizer, or a factory lr -> Optimizer; got "
+            f"{local_optimizer!r}"
+        )
     n = data.n_clients
     p = jnp.asarray(data.weights())
     xs, ys = _pad_shards(data)
@@ -504,6 +582,10 @@ def build_sim(
     m_params = int(sum(leaf_sizes))
     s_total = errors.num_segments(m_params, seg_len)
     l_local = -(-s_total // model_shards)
+    # Segments carry the promoted state dtype (stack_to_matrix concatenates
+    # the leaves), so packet accounting prices THAT — not a hard-coded 32.
+    state_dtype = jnp.result_type(*(l.dtype for l in leaves0))
+    bits_per_value = errors.dtype_bits(state_dtype)
 
     def _leaf_views(row: jnp.ndarray) -> Pytree:
         """One client's parameter pytree as pure layout views of its row.
@@ -557,23 +639,39 @@ def build_sim(
         return loss(_leaf_views(row), x, y)
 
     def local_train(rows, lr, epochs=None):
-        """Full-batch GD for `local_epochs` epochs (paper eq. 3), per client.
+        """Local training for `local_epochs` epochs (paper eq. 3), per client.
 
         ``rows`` are FULL segment rows (N, S[_pad], K); the gradient flows
-        through the leaf views, so the update is the per-leaf GD step laid
+        through the leaf views, so the update is the per-leaf step laid
         out in row coordinates (codec padding receives zero gradient).
         ``epochs`` (optional, (N,) int32) enables heterogeneous compute: the
         scan still runs the static `local_epochs` bound, but client m's
         update is masked out after its own epoch count (values clip to the
         bound).  ``epochs=None`` keeps the exact static trace.
+
+        With a bound ``local_optimizer`` the scan carries (row, opt_state)
+        per client — state freshly `init`-ed each call (= each round) —
+        and the heterogeneous-epochs mask freezes BOTH row and state past
+        a client's own epoch count.  ``local_optimizer=None`` is plain GD,
+        the exact historical trace.
         """
+        opt = None if opt_factory is None else opt_factory(lr)
+
+        def step(r, st, x, y):
+            g = jax.grad(_row_loss)(r, x, y)
+            if opt is None:
+                return r - lr * g, st
+            return opt.update(r, g, st)
+
         if epochs is None:
             def train_one(row, x, y):
-                def body(r, _):
-                    g = jax.grad(_row_loss)(r, x, y)
-                    return r - lr * g, None
+                def body(carry, _):
+                    r, st = carry
+                    return step(r, st, x, y), None
 
-                row, _ = jax.lax.scan(body, row, None, length=local_epochs)
+                st0 = None if opt is None else opt.init(row)
+                (row, _), _ = jax.lax.scan(body, (row, st0), None,
+                                           length=local_epochs)
                 return row
 
             return jax.vmap(train_one)(rows, xs, ys)
@@ -581,11 +679,20 @@ def build_sim(
         epochs = jnp.minimum(jnp.asarray(epochs, jnp.int32), local_epochs)
 
         def train_one_masked(row, x, y, ep):
-            def body(r, i):
-                g = jax.grad(_row_loss)(r, x, y)
-                return jnp.where(i < ep, r - lr * g, r), None
+            def body(carry, i):
+                r, st = carry
+                r2, st2 = step(r, st, x, y)
+                keep = i < ep
+                r2 = jnp.where(keep, r2, r)
+                if st is not None:
+                    st2 = jax.tree.map(
+                        lambda a, b: jnp.where(keep, a, b), st2, st
+                    )
+                return (r2, st2), None
 
-            row, _ = jax.lax.scan(body, row, jnp.arange(local_epochs))
+            st0 = None if opt is None else opt.init(row)
+            (row, _), _ = jax.lax.scan(body, (row, st0),
+                                       jnp.arange(local_epochs))
             return row
 
         return jax.vmap(train_one_masked)(rows, xs, ys, epochs)
@@ -599,9 +706,17 @@ def build_sim(
     def train_loss(rows):
         return jax.vmap(_row_loss)(rows, xs, ys)
 
+    def _local_window(full: jnp.ndarray) -> jnp.ndarray:
+        if model_shards == 1:
+            return full
+        return jax.lax.dynamic_slice_in_dim(
+            full, _seg_start(), l_local, axis=1
+        )
+
     def _round_core(w_loc: jnp.ndarray, rng: jax.Array, scenario: Scenario,
-                    part: jnp.ndarray | None):
-        """The shared round body: train -> (mask) -> exchange, on rows.
+                    part: jnp.ndarray | None,
+                    ratio_override: jnp.ndarray | None = None):
+        """The shared round body: train -> (mask) -> encode -> exchange.
 
         ``w_loc`` is this shard's (N, L_local, K) window (== the full
         (N, S, K) rows when ``model_shards == 1``).  ``part`` is the
@@ -611,25 +726,49 @@ def build_sim(
         loop's signal refresh.  Both `_advance` and `_advance_closed` run
         THIS code, so the open- and closed-loop paths cannot drift apart —
         the uniform policy's bit-identity with the open loop rests on it.
+
+        The codec (DESIGN.md §15) slots between training and delivery: it
+        encodes the REPLICATED full rows (transmit mask + quantization
+        noise are therefore identical across model shards — see
+        `compression.stochastic_quantize`), the lossy protocols exchange
+        the encoded segments under the (N, S) transmit mask, and the
+        exchange-free branches plus every non-participating receiver keep
+        the UNENCODED state (`dispatch_round_seg` w_raw; the explicit
+        restore below) — nobody's parameters get quantized without an
+        actual transmission.  ``ratio_override`` ((N,), optional) is the
+        budget policy's per-client waterfill (`_advance_closed`).
         """
         w_full = _full_rows(w_loc)
         trained = local_train(w_full, scenario.lr, scenario.local_epochs)
         if part is not None:
             trained = jnp.where(part[:, None, None] > 0, trained, w_full)
-        if model_shards == 1:
-            w_ex = trained
-        else:
-            w_ex = jax.lax.dynamic_slice_in_dim(
-                trained, _seg_start(), l_local, axis=1
+        tx_mask = None
+        w_send = trained
+        if scenario.codec_id is not None:
+            ratio = (scenario.compress_ratio if ratio_override is None
+                     else ratio_override)
+            w_send, tx_full = compression.encode(
+                scenario.codec_id, trained, ratio,
+                jax.random.fold_in(rng, _CODEC_KEY_TAG),
+                n_real=s_total, dtype_bits=bits_per_value,
             )
+            tx_mask = tx_full[:, :s_total]
+        w_ex = _local_window(w_send)
+        w_raw = None if scenario.codec_id is None else _local_window(trained)
         new_loc, _e, bias = protocols.dispatch_round_seg(
             w_ex, p, scenario.rho, scenario.link_eps, rng,
             scenario.protocol_id, scenario.mode_id, scenario.aggregator,
             n_mixes=aayg_mixes, participation=part,
+            tx_mask=tx_mask, w_raw=w_raw,
             agg_impl=agg_impl, track_bias=track_bias,
             seg_total=None if model_shards == 1 else s_total,
             seg_start=_seg_start(),
         )
+        if scenario.codec_id is not None and part is not None:
+            # dispatch restores sampled-out receivers to its exchange INPUT
+            # (the encoded w_ex); a client that sat the round out must keep
+            # its unencoded state instead.
+            new_loc = jnp.where(part[:, None, None] > 0, new_loc, w_raw)
         return new_loc, trained, w_full, bias
 
     def _advance(w_loc: jnp.ndarray, rng: jax.Array, scenario: Scenario):
@@ -663,8 +802,19 @@ def build_sim(
             scenario_t.policy_id, base, signals, p,
             scenario_t.rho[:n, :n], scenario_t.select_frac,
         )
-        new_loc, trained, old_full, bias = _round_core(w_loc, rng,
-                                                       scenario_t, mask)
+        ratio_override = None
+        if scenario_t.codec_id is not None:
+            # Joint selection + compression (DESIGN.md §15): under the
+            # "budget" policy the slot-budget waterfill also decides HOW
+            # MUCH each selected client compresses; other policies keep
+            # the scenario's scalar ratio (broadcast, value-identical).
+            ratio_override = selection.budget_ratio(
+                scenario_t.policy_id, base, p, scenario_t.rho[:n, :n],
+                scenario_t.select_frac, scenario_t.compress_ratio,
+            )
+        new_loc, trained, old_full, bias = _round_core(
+            w_loc, rng, scenario_t, mask, ratio_override
+        )
         out_full = _full_rows(new_loc)
         # Signal refresh behind an optimization barrier: the extra
         # reductions (per-client loss / update norms) must not give XLA
@@ -809,6 +959,7 @@ def build_sim(
         n_segments=s_total,
         local_segments=l_local,
         seg_len=seg_len,
+        bits_per_value=bits_per_value,
     )
 
 
@@ -846,7 +997,7 @@ def run(
         seg_len=cfg.seg_len, local_epochs=cfg.local_epochs,
         n_rounds=cfg.n_rounds, aayg_mixes=cfg.aayg_mixes,
         agg_impl=cfg.agg_impl, eval_every=cfg.eval_every,
-        track_bias=cfg.track_bias,
+        track_bias=cfg.track_bias, local_optimizer=cfg.local_optimizer,
     )
     metrics = jax.jit(sim.run_scenario, **donate_kwargs())(
         make_scenario(net, cfg)

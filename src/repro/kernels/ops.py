@@ -29,16 +29,18 @@ def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def ra_aggregate(w_seg, p, e, *, mode: str = "ra_normalized",
+def ra_aggregate(w_seg, p, e, *, tx=None, mode: str = "ra_normalized",
                  block_l: int = 8, interpret: bool | None = None):
     """Fused R&A aggregation (paper eq. 6 / fused substitution baseline).
 
     w_seg: (N, L, K) or batched (B, N, L, K); p: (N,)/(B, N);
     e: (N, N, L)/(B, N, N, L) in bool_/uint8/float32 -> same rank as w_seg.
+    ``tx`` ((N, L)/(B, N, L), optional) selects the sparsity-aware variant
+    that composes the codec's per-segment transmit mask in-kernel.
     `jax.vmap` over a grid axis lowers onto the batched kernel.
     """
     it = interpret_default() if interpret is None else interpret
-    return _ra.ra_aggregate(w_seg, p, e, mode=mode, block_l=block_l,
+    return _ra.ra_aggregate(w_seg, p, e, tx, mode=mode, block_l=block_l,
                             interpret=it)
 
 

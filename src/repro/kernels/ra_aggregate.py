@@ -81,11 +81,57 @@ def _ra_kernel_sub(p_ref, e_ref, w_ref, own_ref, out_ref):
     out_ref[0, 0] = (num + miss[:, None] * own).astype(out_ref.dtype)
 
 
+def _tx_compose(e, tx):
+    """In-VMEM transmit-mask composition for one receiver's (N, BL) block.
+
+    Pruned sender segments (tx == 0) drop out of the delivered set; the
+    receiver's own row is restored to 1 (its own segments never cross the
+    air).  Mirrors `aggregation.apply_transmit_mask` per block — done here
+    so the sparsity-aware path consumes the compact PACKED (N, L) transmit
+    mask straight from HBM instead of a pre-composed (N, N, L) tensor (an
+    extra full success-mask's worth of HBM traffic on a memory-bound op).
+    The receiver index is grid dimension 1; TPU needs the >= 2-D
+    broadcasted_iota form.
+    """
+    r = pl.program_id(1)
+    sender = jax.lax.broadcasted_iota(jnp.int32, e.shape, 0)
+    return jnp.where(sender == r, 1.0, e * tx)
+
+
+def _ra_kernel_tx(p_ref, e_ref, tx_ref, w_ref, out_ref):
+    """Sparsity-aware adaptive normalization: extra tx_ref (1, N, BL)."""
+    p = p_ref[0]
+    e = e_ref[0, 0].astype(jnp.float32)
+    tx = tx_ref[0].astype(jnp.float32)                # (N, BL)
+    e = _tx_compose(e, tx)
+    w = w_ref[0].astype(jnp.float32)
+    coeff = p[:, None] * e
+    denom = jnp.maximum(jnp.sum(coeff, axis=0), 1e-12)
+    num = jnp.sum(coeff[:, :, None] * w, axis=0)
+    out_ref[0, 0] = (num / denom[:, None]).astype(out_ref.dtype)
+
+
+def _ra_kernel_sub_tx(p_ref, e_ref, tx_ref, w_ref, own_ref, out_ref):
+    """Sparsity-aware substitution: pruned + lost mass folds to own block."""
+    p = p_ref[0]
+    e = e_ref[0, 0].astype(jnp.float32)
+    tx = tx_ref[0].astype(jnp.float32)
+    e = _tx_compose(e, tx)
+    w = w_ref[0].astype(jnp.float32)
+    own = own_ref[0, 0].astype(jnp.float32)
+    coeff = p[:, None] * e
+    num = jnp.sum(coeff[:, :, None] * w, axis=0)
+    miss = jnp.sum(p) - jnp.sum(coeff, axis=0)
+    out_ref[0, 0] = (num + miss[:, None] * own).astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("mode", "block_l", "interpret"))
-def _ra_call(w_seg, p, e, *, mode, block_l, interpret):
+def _ra_call(w_seg, p, e, tx=None, *, mode, block_l, interpret):
     """The batched pallas_call: w_seg (B, N, L, K), p (B, N), e (B, N, N, L).
 
     The leading batch axis is a grid dimension — grid (B, N, ceil(L/BL)).
+    ``tx`` (optional, (B, N, L) packed) selects the sparsity-aware kernel
+    variant; its presence is a static (trace-level) choice.
     """
     b, n, l, k = w_seg.shape
     bl = min(block_l, l)
@@ -99,24 +145,34 @@ def _ra_call(w_seg, p, e, *, mode, block_l, interpret):
         # tail is sliced off below) instead of shrinking BL to a divisor.
         w_seg = jnp.pad(w_seg, ((0, 0), (0, 0), (0, lp - l), (0, 0)))
         e_rm = jnp.pad(e_rm, ((0, 0), (0, 0), (0, 0), (0, lp - l)))
+        if tx is not None:
+            tx = jnp.pad(tx, ((0, 0), (0, 0), (0, lp - l)))
     grid = (b, n, lp // bl)
     p2 = p.astype(jnp.float32)
 
     in_specs = [
         pl.BlockSpec((1, n), lambda bi, r, s: (bi, 0)),             # p
         pl.BlockSpec((1, 1, n, bl), lambda bi, r, s: (bi, r, 0, s)),  # e
-        pl.BlockSpec((1, n, bl, k), lambda bi, r, s: (bi, 0, s, 0)),  # w
     ]
-    args = [p2, e_rm, w_seg]
+    args = [p2, e_rm]
+    if tx is not None:
+        in_specs.append(
+            pl.BlockSpec((1, n, bl), lambda bi, r, s: (bi, 0, s))   # tx
+        )
+        args.append(tx)
+    in_specs.append(
+        pl.BlockSpec((1, n, bl, k), lambda bi, r, s: (bi, 0, s, 0))   # w
+    )
+    args.append(w_seg)
     if mode == "substitution":
-        kernel = _ra_kernel_sub
+        kernel = _ra_kernel_sub if tx is None else _ra_kernel_sub_tx
         # The receiver's own segment block (same array, receiver-indexed).
         in_specs.append(
             pl.BlockSpec((1, 1, bl, k), lambda bi, r, s: (bi, r, s, 0))
         )
         args.append(w_seg)
     else:
-        kernel = _ra_kernel
+        kernel = _ra_kernel if tx is None else _ra_kernel_tx
 
     out = pl.pallas_call(
         kernel,
@@ -183,10 +239,54 @@ def _scalar_fn(mode: str, block_l: int, interpret: bool):
     return fn
 
 
+@functools.lru_cache(maxsize=None)
+def _batched_fn_tx(mode: str, block_l: int, interpret: bool):
+    """Rank-4 sparsity-aware entry point (same fold-the-batch vmap rule)."""
+
+    @jax.custom_batching.custom_vmap
+    def fnb(w_seg, p, e, tx):
+        return _ra_call(w_seg, p, e, tx, mode=mode, block_l=block_l,
+                        interpret=interpret)
+
+    @fnb.def_vmap
+    def _rule(axis_size, in_batched, w_seg, p, e, tx):  # noqa: ANN001
+        w_seg, p, e, tx = _broadcast_unbatched(axis_size, in_batched,
+                                               (w_seg, p, e, tx))
+        inner = w_seg.shape[1]
+        flat = fnb(
+            w_seg.reshape((axis_size * inner,) + w_seg.shape[2:]),
+            p.reshape((axis_size * inner,) + p.shape[2:]),
+            e.reshape((axis_size * inner,) + e.shape[2:]),
+            tx.reshape((axis_size * inner,) + tx.shape[2:]),
+        )
+        return flat.reshape((axis_size, inner) + flat.shape[1:]), True
+
+    return fnb
+
+
+@functools.lru_cache(maxsize=None)
+def _scalar_fn_tx(mode: str, block_l: int, interpret: bool):
+    """Rank-3 sparsity-aware entry point; vmap routes to the batched form."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(w_seg, p, e, tx):
+        return _ra_call(w_seg[None], p[None], e[None], tx[None], mode=mode,
+                        block_l=block_l, interpret=interpret)[0]
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, w_seg, p, e, tx):  # noqa: ANN001
+        w_seg, p, e, tx = _broadcast_unbatched(axis_size, in_batched,
+                                               (w_seg, p, e, tx))
+        return _batched_fn_tx(mode, block_l, interpret)(w_seg, p, e, tx), True
+
+    return fn
+
+
 def ra_aggregate(
     w_seg: jnp.ndarray,
     p: jnp.ndarray,
     e: jnp.ndarray,
+    tx: jnp.ndarray | None = None,
     *,
     mode: str = "ra_normalized",
     block_l: int = 8,
@@ -199,6 +299,12 @@ def ra_aggregate(
       p:     (N,) / (B, N) float32 weights.
       e:     (N, N, L) / (B, N, N, L) success mask (sender, receiver,
              segment); bool_/uint8/float32 accepted (one cast at the edge).
+      tx:    optional (N, L) / (B, N, L) per-segment TRANSMIT mask (the
+             codec layer's packed-bool output, `repro.core.compression`) —
+             selects the sparsity-aware kernel variant, which composes the
+             pruned-sender semantics of `aggregation.apply_transmit_mask`
+             in VMEM instead of pre-materializing a composed (N, N, L)
+             success mask in HBM.
       mode: "ra_normalized" (eq. 6) or "substitution" (fused baseline [12]).
       block_l: segments per VMEM tile (L pads up to a multiple).
       interpret: run in Pallas interpret mode (CPU validation; TPU: False).
@@ -220,11 +326,26 @@ def ra_aggregate(
                 f"(N,)/(B, N) and e (N, N, L)/(B, N, N, L); got p {p.shape}, "
                 f"e {e.shape}"
             )
-        return _batched_fn(mode, block_l, bool(interpret))(w_seg, p, e)
+        if tx is None:
+            return _batched_fn(mode, block_l, bool(interpret))(w_seg, p, e)
+        if tx.ndim == 2:  # shared transmit mask across the batch
+            tx = jnp.broadcast_to(tx[None], (b,) + tx.shape)
+        if tx.shape != (b, n, l):
+            raise ValueError(
+                f"batched ra_aggregate: tx must be (N, L)/(B, N, L), got "
+                f"{tx.shape} for w_seg {w_seg.shape}"
+            )
+        return _batched_fn_tx(mode, block_l, bool(interpret))(w_seg, p, e, tx)
     n, l, _ = w_seg.shape
     if p.shape != (n,) or e.shape != (n, n, l):
         raise ValueError(
             f"ra_aggregate: w_seg {w_seg.shape} needs p (N,) and e "
             f"(N, N, L); got p {p.shape}, e {e.shape}"
         )
-    return _scalar_fn(mode, block_l, bool(interpret))(w_seg, p, e)
+    if tx is None:
+        return _scalar_fn(mode, block_l, bool(interpret))(w_seg, p, e)
+    if tx.shape != (n, l):
+        raise ValueError(
+            f"ra_aggregate: tx must be (N, L) = ({n}, {l}), got {tx.shape}"
+        )
+    return _scalar_fn_tx(mode, block_l, bool(interpret))(w_seg, p, e, tx)
